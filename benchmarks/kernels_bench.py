@@ -1,0 +1,76 @@
+"""Kernel microbenches: correctness deltas vs oracle + oracle wall time.
+
+Pallas interpret mode executes the kernel body in Python on CPU, so kernel
+wall-clock here is NOT meaningful — correctness is the derived metric and
+the XLA oracle time gives the baseline the TPU kernel must beat.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.attention.ops import flash_sdpa
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.coupling.ops import fused_coupling_fwd
+from repro.kernels.coupling.ref import coupling_fwd_ref
+from repro.kernels.rwkv.ops import rwkv6_wkv
+from repro.kernels.rwkv.ref import wkv_ref
+from repro.kernels.ssd.ops import mamba2_ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+def run():
+    # flash attention
+    q = jax.random.normal(RNG, (1, 8, 512, 64), jnp.bfloat16)
+    k = jax.random.normal(RNG, (1, 2, 512, 64), jnp.bfloat16)
+    v = jax.random.normal(RNG, (1, 2, 512, 64), jnp.bfloat16)
+    o = flash_sdpa(q, k, v)
+    o_ref = attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32) - o_ref.astype(jnp.float32))))
+    us = time_fn(jax.jit(attention_ref), q, k, v)
+    emit("kernel/flash_attention", us, f"max_err_vs_ref={err:.2e}")
+
+    # fused coupling
+    x = jax.random.normal(RNG, (4, 1024, 8))
+    raw = jax.random.normal(jax.random.PRNGKey(1), x.shape)
+    t = jax.random.normal(jax.random.PRNGKey(2), x.shape)
+    y, ld = fused_coupling_fwd(x, raw, t)
+    y_ref, ld_ref = coupling_fwd_ref(x, raw, t)
+    err = float(jnp.max(jnp.abs(y - y_ref))) + float(jnp.max(jnp.abs(ld - ld_ref)))
+    us = time_fn(jax.jit(coupling_fwd_ref), x, raw, t)
+    emit("kernel/fused_coupling", us, f"max_err_vs_ref={err:.2e}")
+
+    # ssd
+    b, h, s, p, n = 1, 4, 256, 32, 16
+    xs = jax.random.normal(RNG, (b, h, s, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (b, h, s)))
+    da = -dt * 0.4
+    bi = jax.random.normal(jax.random.PRNGKey(4), (b, s, n))
+    ci = jax.random.normal(jax.random.PRNGKey(5), (b, s, n))
+    yk, stk = mamba2_ssd(xs, da, dt, bi, ci, chunk=64)
+    yr, str_ = ssd_ref(xs, da, dt, bi, ci)
+    err = float(jnp.max(jnp.abs(yk - yr)))
+    us = time_fn(jax.jit(ssd_ref), xs, da, dt, bi, ci)
+    emit("kernel/mamba2_ssd", us, f"max_err_vs_ref={err:.2e}")
+
+    # rwkv wkv
+    kd = 16
+    r = jax.random.normal(RNG, (1, 4, 256, kd))
+    kk = jax.random.normal(jax.random.PRNGKey(6), (1, 4, 256, kd))
+    vv = jax.random.normal(jax.random.PRNGKey(7), (1, 4, 256, kd))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(8), (1, 4, 256, kd)))
+    u = 0.1 * jax.random.normal(jax.random.PRNGKey(9), (4, kd))
+    yk, _ = rwkv6_wkv(r, kk, vv, w, u, chunk=64)
+    yr, _ = wkv_ref(r, kk, vv, w, u)
+    err = float(jnp.max(jnp.abs(yk - yr)))
+    us = time_fn(jax.jit(wkv_ref), r, kk, vv, w, u)
+    emit("kernel/rwkv6_wkv", us, f"max_err_vs_ref={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

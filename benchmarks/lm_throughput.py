@@ -1,0 +1,49 @@
+"""Reversible-LM training throughput and memory: the paper's technique on
+the production path, vs remat and naive AD on identical weights."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.config import get_arch
+from repro.data import SyntheticTokens
+from repro.models import build_model
+
+SEQ, BATCH = 128, 8
+
+
+def bench_arch(arch: str):
+    spec = get_arch(arch)
+    model, cfg = build_model(spec.reduced)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg.vocab_size, SEQ, BATCH, seed=0)
+    batch = data.batch_at(0)
+
+    for mode in ("invertible", "coupled", "remat", "autodiff"):
+        if mode in ("invertible", "coupled") and not cfg.reversible:
+            continue
+
+        def loss(p, b, _m=mode):
+            return model.train_loss(p, b, grad_mode=_m)[0]
+
+        g = jax.jit(jax.grad(loss))
+        compiled = g.lower(params, batch).compile()
+        tb = compiled.memory_analysis().temp_size_in_bytes
+        us = time_fn(g, params, batch)
+        toks_s = BATCH * SEQ / (us / 1e6)
+        emit(
+            f"lm_train/{arch}/{mode}",
+            us,
+            f"tokens_per_s={toks_s:.0f} temp_bytes={tb}",
+        )
+
+
+def run():
+    for arch in ("yi-6b", "rwkv6-7b", "granite-moe-1b-a400m"):
+        bench_arch(arch)
+
+
+if __name__ == "__main__":
+    run()

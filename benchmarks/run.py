@@ -1,0 +1,40 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   fig1 (memory vs input size)  -> benchmarks.memory_vs_size
+#   fig2 (memory vs depth)       -> benchmarks.memory_vs_depth
+#   flow training throughput     -> benchmarks.flow_training
+#   reversible-LM throughput     -> benchmarks.lm_throughput
+#   kernel correctness/latency   -> benchmarks.kernels_bench
+#   roofline table (deliverable g, reads dry-run artifacts)
+#                                -> benchmarks.roofline_table
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        flow_training,
+        kernels_bench,
+        lm_throughput,
+        memory_vs_depth,
+        memory_vs_size,
+        roofline_table,
+    )
+
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    mods = {
+        "fig2": memory_vs_depth,
+        "fig1": memory_vs_size,
+        "flow": flow_training,
+        "lm": lm_throughput,
+        "kernels": kernels_bench,
+        "roofline": roofline_table,
+    }
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        mod.run()
+
+
+if __name__ == '__main__':
+    main()

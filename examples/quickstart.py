@@ -1,0 +1,71 @@
+"""Quickstart: density estimation on 2-D two-moons with RealNVP.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains in invertible (memory-frugal) mode, checks round-trip invertibility,
+and draws samples by inverting the flow — the package's core loop in ~60
+lines.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_realnvp, nll_loss, std_normal_sample
+from repro.optim import adamw_init, adamw_update, cosine_warmup
+from repro.config import TrainConfig
+
+
+def two_moons(rng, n):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    theta = jnp.pi * jax.random.uniform(k1, (n,))
+    flip = jax.random.bernoulli(k2, 0.5, (n,))
+    x = jnp.stack(
+        [
+            jnp.where(flip, jnp.cos(theta), 1 - jnp.cos(theta)),
+            jnp.where(flip, jnp.sin(theta) - 0.25, -jnp.sin(theta) + 0.25),
+        ],
+        axis=1,
+    )
+    return x + 0.05 * jax.random.normal(k3, (n, 2))
+
+
+def main(steps: int = 400):
+    rng = jax.random.PRNGKey(0)
+    flow = build_realnvp(depth=6, hidden=64)  # invertible grad engine
+    x0 = two_moons(rng, 512)
+    params = flow.init(rng, x0)
+    tcfg = TrainConfig(steps=steps, lr=2e-3, warmup_steps=20)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch, i):
+        loss, grads = jax.value_and_grad(
+            lambda p: nll_loss(flow, p, batch), allow_int=True
+        )(params)
+        lr = cosine_warmup(i, tcfg.lr, tcfg.warmup_steps, tcfg.steps)
+        params, opt, _ = adamw_update(params, grads, opt, tcfg, lr)
+        return params, opt, loss
+
+    for i in range(steps):
+        batch = two_moons(jax.random.fold_in(rng, i), 512)
+        params, opt, loss = step(params, opt, batch, jnp.asarray(i))
+        if i % 100 == 0 or i == steps - 1:
+            print(f"step {i:4d}  nll/dim {float(loss):.4f}")
+
+    # invertibility check + sampling by inversion
+    z, logdet = flow.forward(params, x0)
+    x_rec = flow.inverse(params, z)
+    print("round-trip max err:", float(jnp.max(jnp.abs(x0 - x_rec))))
+    samples = flow.inverse(params, jax.random.normal(rng, (1000, 2)))
+    print(
+        "sample moments: mean",
+        jnp.round(jnp.mean(samples, 0), 3),
+        "std",
+        jnp.round(jnp.std(samples, 0), 3),
+    )
+    assert float(loss) < 1.2, "two-moons NLL should drop well below the unit gaussian"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: invertible-by-design memory-frugal training in JAX.
+
+Reproduction + production scale-up of "InvertibleNetworks.jl: A Julia
+package for scalable normalizing flows" (Orozco et al., 2023).
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,29 @@
+"""Architecture registry: importing this package registers every assigned
+architecture (plus the paper-native flow configs)."""
+
+import repro.configs.zamba2_7b  # noqa: F401
+import repro.configs.yi_6b  # noqa: F401
+import repro.configs.glm4_9b  # noqa: F401
+import repro.configs.granite_34b  # noqa: F401
+import repro.configs.command_r_plus_104b  # noqa: F401
+import repro.configs.granite_moe_1b_a400m  # noqa: F401
+import repro.configs.llama4_maverick_400b_a17b  # noqa: F401
+import repro.configs.rwkv6_7b  # noqa: F401
+import repro.configs.llava_next_34b  # noqa: F401
+import repro.configs.whisper_small  # noqa: F401
+import repro.configs.flows  # noqa: F401
+
+from repro.config import get_arch, list_archs  # noqa: F401
+
+ASSIGNED_ARCHS = (
+    "zamba2-7b",
+    "yi-6b",
+    "glm4-9b",
+    "granite-34b",
+    "command-r-plus-104b",
+    "granite-moe-1b-a400m",
+    "llama4-maverick-400b-a17b",
+    "rwkv6-7b",
+    "llava-next-34b",
+    "whisper-small",
+)

@@ -1,0 +1,40 @@
+"""Paper-native flow configurations (the reproduction's own architectures).
+
+These are not part of the assigned LM pool; they parameterize the flow
+networks for the examples and the Fig. 1/2 benchmarks.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FlowConfig:
+    name: str
+    kind: str  # realnvp | glow | chint
+    depth: int = 8
+    hidden: int = 64
+    n_scales: int = 3
+    k_steps: int = 8
+    grad_mode: str = "invertible"
+
+
+GLOW_PAPER = FlowConfig(name="glow-paper", kind="glow", n_scales=3, k_steps=8, hidden=64)
+# the exact setting of the paper's Fig. 1/2: RGB images, batch 8
+GLOW_FIG1 = FlowConfig(name="glow-fig1", kind="glow", n_scales=3, k_steps=8, hidden=64)
+REALNVP_2D = FlowConfig(name="realnvp-2d", kind="realnvp", depth=8, hidden=128)
+CHINT_POSTERIOR = FlowConfig(name="chint-posterior", kind="chint", depth=4, hidden=128)
+
+
+def build_flow(cfg: FlowConfig, grad_mode: str | None = None):
+    from repro.core import build_chint, build_glow, build_realnvp
+
+    gm = grad_mode or cfg.grad_mode
+    if cfg.kind == "glow":
+        return build_glow(
+            n_scales=cfg.n_scales, k_steps=cfg.k_steps, hidden=cfg.hidden, grad_mode=gm
+        )
+    if cfg.kind == "realnvp":
+        return build_realnvp(depth=cfg.depth, hidden=cfg.hidden, grad_mode=gm)
+    if cfg.kind == "chint":
+        return build_chint(depth=cfg.depth, hidden=cfg.hidden, grad_mode=gm)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,36 @@
+# The paper's primary contribution: invertible layers + the memory-frugal
+# backprop engine that recomputes activations by inversion instead of storing
+# them (InvertibleNetworks.jl, reproduced in JAX).
+from repro.core.actnorm import ActNorm
+from repro.core.autodiff import (
+    GRAD_MODES,
+    make_chain_apply,
+    make_scan_apply,
+    value_and_grad_nll,
+)
+from repro.core.chain import InvertibleChain, OnFirst, Pack, Split
+from repro.core.conditional import ConditionalFlow, SummaryMLP, build_chint
+from repro.core.conv1x1 import Conv1x1
+from repro.core.coupling import AffineCoupling
+from repro.core.distributions import (
+    flatten_state,
+    std_normal_logpdf,
+    std_normal_sample,
+)
+from repro.core.glow import build_glow
+from repro.core.haar import HaarSqueeze, Squeeze
+from repro.core.hint import HINTCoupling
+from repro.core.hyperbolic import HyperbolicLayer
+from repro.core.objectives import amortized_vi_loss, nll_bits_per_dim, nll_loss
+from repro.core.realnvp import build_realnvp
+from repro.core.types import Invertible
+
+__all__ = [
+    "ActNorm", "AffineCoupling", "ConditionalFlow", "Conv1x1", "GRAD_MODES",
+    "HINTCoupling", "HaarSqueeze", "HyperbolicLayer", "Invertible",
+    "InvertibleChain", "OnFirst", "Pack", "Split", "Squeeze", "SummaryMLP",
+    "amortized_vi_loss", "build_chint", "build_glow", "build_realnvp",
+    "flatten_state", "make_chain_apply", "make_scan_apply",
+    "nll_bits_per_dim", "nll_loss", "std_normal_logpdf", "std_normal_sample",
+    "value_and_grad_nll",
+]

@@ -1,0 +1,47 @@
+"""Activation normalization (GLOW [4]) — invertible per-channel affine."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Invertible
+
+
+class ActNorm(Invertible):
+    """y = x * exp(log_s) + b, per trailing-dim channel.
+
+    ``logdet = spatial_size * sum(log_s)``.  Supports (B, D) and (B, H, W, C)
+    inputs.  Use :meth:`ddi` for GLOW-style data-dependent initialization.
+    """
+
+    def init(self, rng, x):
+        c = x.shape[-1]
+        return {"log_s": jnp.zeros((c,), jnp.float32), "b": jnp.zeros((c,), jnp.float32)}
+
+    def _spatial(self, x):
+        return math.prod(x.shape[1:-1]) if x.ndim > 2 else 1
+
+    def forward(self, params, x, cond=None):
+        log_s = params["log_s"].astype(x.dtype)
+        y = x * jnp.exp(log_s) + params["b"].astype(x.dtype)
+        ld = self._spatial(x) * jnp.sum(params["log_s"]).astype(jnp.float32)
+        return y, jnp.broadcast_to(ld, (x.shape[0],))
+
+    def inverse(self, params, y, cond=None):
+        log_s = params["log_s"].astype(y.dtype)
+        return (y - params["b"].astype(y.dtype)) * jnp.exp(-log_s)
+
+    @staticmethod
+    def ddi(params, x, eps: float = 1e-6):
+        """Data-dependent init: post-layer activations have zero mean/unit var."""
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(x, axis=axes)
+        sd = jnp.std(x, axis=axes) + eps
+        log_s = -jnp.log(sd)
+        return {
+            "log_s": log_s.astype(jnp.float32),
+            "b": (-mu / sd).astype(jnp.float32),
+        }

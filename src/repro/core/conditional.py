@@ -1,0 +1,96 @@
+"""Conditional flows for amortized Bayesian inference (paper §4).
+
+``ConditionalFlow`` pairs an invertible flow over parameters ``theta`` with an
+arbitrary (non-invertible) *summary network* over observations ``y`` — the
+BayesFlow [15] pattern.  The summary network is differentiated by plain AD;
+the flow by the memory-frugal invertible engine; both through one
+``jax.grad`` call.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.actnorm import ActNorm
+from repro.core.chain import InvertibleChain
+from repro.core.conv1x1 import Conv1x1
+from repro.core.distributions import std_normal_logpdf, std_normal_sample
+from repro.core.hint import HINTCoupling
+from repro.core.objectives import nll_loss
+from repro.nn.nets import CouplingMLP
+
+
+def build_chint(
+    depth: int = 4,
+    recursion: int = 2,
+    hidden: int = 128,
+    grad_mode: str = "invertible",
+) -> InvertibleChain:
+    """Conditional HINT [6]: ActNorm + 1x1 mixing + recursive couplings."""
+    factory = lambda d_out: CouplingMLP(d_out, hidden=hidden, depth=2)
+    layers = []
+    for _ in range(depth):
+        layers.append(ActNorm())
+        layers.append(Conv1x1())
+        layers.append(HINTCoupling(factory, depth=recursion))
+    return InvertibleChain(layers, grad_mode=grad_mode)
+
+
+class SummaryMLP:
+    """Permutation-sensitive summary network (replace at will — anything
+    differentiable works; this is the paper's Zygote-interop path)."""
+
+    def __init__(self, d_out: int = 64, hidden: int = 128, depth: int = 2):
+        self.net = CouplingMLP(d_out, hidden=hidden, depth=depth)
+
+    def init(self, rng, d_in: int):
+        return self.net.init(rng, d_in, 0)
+
+    def apply(self, params, y):
+        return self.net.apply(params, y.reshape(y.shape[0], -1), None)
+
+
+class ConditionalFlow:
+    """flow(theta; cond=summary(y)) with exact posterior density."""
+
+    def __init__(self, flow: InvertibleChain, summary: SummaryMLP | None = None):
+        self.flow = flow
+        self.summary = summary
+
+    def init(self, rng, theta, y):
+        kf, ks = jax.random.split(rng)
+        params = {}
+        if self.summary is not None:
+            params["summary"] = self.summary.init(ks, y.reshape(y.shape[0], -1).shape[-1])
+            cond = self.summary.apply(params["summary"], y)
+        else:
+            cond = y
+        params["flow"] = self.flow.init(kf, theta, cond=cond)
+        return params
+
+    def _cond(self, params, y):
+        if self.summary is None:
+            return y
+        return self.summary.apply(params["summary"], y)
+
+    def log_prob(self, params, theta, y):
+        cond = self._cond(params, y)
+        z, logdet = self.flow.forward(params["flow"], theta, cond)
+        return std_normal_logpdf(z) + logdet
+
+    def loss(self, params, theta, y):
+        cond = self._cond(params, y)
+        return nll_loss(self.flow, params["flow"], theta, cond)
+
+    def sample(self, params, rng, y, n: int, theta_dim: int):
+        """n posterior samples per observation (y broadcast over samples)."""
+        cond = self._cond(params, y)
+        cond = jnp.repeat(cond, n, axis=0)
+        z = jax.random.normal(rng, (cond.shape[0], theta_dim))
+        return self.flow.inverse(params["flow"], z, cond)
+
+    def sample_like(self, params, rng, y, theta_like):
+        cond = self._cond(params, y)
+        z = std_normal_sample(rng, theta_like)
+        return self.flow.inverse(params["flow"], z, cond)

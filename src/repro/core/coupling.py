@@ -1,0 +1,115 @@
+"""Affine / additive coupling layers (NICE [1], RealNVP [2]).
+
+The conditioner is an arbitrary non-invertible network (``nn.nets``); inside
+the memory-frugal engine it is differentiated by ordinary AD *locally* — the
+package's ChainRules-interop story.  Log-scales are soft-clamped
+(FrEIA-style ``clamp * tanh(s / clamp)``) so the inverse is numerically stable
+at any training stage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Invertible
+
+
+class AffineCoupling(Invertible):
+    """Split the trailing dim into (xa, xb); transform one half conditioned on
+    the other.
+
+    Args:
+      conditioner: ``CouplingMLP``/``CouplingCNN``-like factory (``init(rng,
+        d_in, d_cond)``, ``apply(params, x, cond)``).
+      flip: transform the *second* half instead of the first (alternate
+        across layers in lieu of permutations).
+      additive: NICE-style shift-only coupling (logdet == 0, exactly
+        invertible in any dtype).
+      clamp: soft-clamp bound for log-scales.
+    """
+
+    def __init__(self, conditioner_factory, flip: bool = False, additive: bool = False,
+                 clamp: float = 2.0, kernel_inverse: bool = False):
+        self._factory = conditioner_factory
+        self.flip = flip
+        self.additive = additive
+        self.clamp = clamp
+        # use the fused Pallas kernel (repro.kernels.coupling) on the inverse
+        # (sampling) path — it is forward-only (no AD rule), which is exactly
+        # what sampling needs; the training path stays on differentiable XLA.
+        self.kernel_inverse = kernel_inverse
+
+    def _split(self, x):
+        c = x.shape[-1]
+        ca = c // 2
+        xa, xb = x[..., :ca], x[..., ca:]
+        return (xb, xa) if self.flip else (xa, xb)
+
+    def _merge(self, xa, xb):
+        return (
+            jnp.concatenate([xb, xa], axis=-1)
+            if self.flip
+            else jnp.concatenate([xa, xb], axis=-1)
+        )
+
+    def init(self, rng, x, d_cond: int = 0):
+        c = x.shape[-1]
+        ca = c // 2 if not self.flip else c - c // 2
+        cb = c - ca
+        d_out = ca if self.additive else 2 * ca
+        net = self._factory(d_out)
+        return {"net": net.init(rng, cb, d_cond)}
+
+    def _net_out(self, params, xb, cond):
+        c_out = None
+        net = self._factory(0)  # d_out unused at apply time
+        h = net.apply(params["net"], xb, cond)
+        return h
+
+    def _scale_shift(self, params, xb, cond, ca):
+        h = self._net_out(params, xb, cond)
+        if self.additive:
+            return None, h
+        log_s_raw, t = h[..., :ca], h[..., ca:]
+        log_s = self.clamp * jnp.tanh(log_s_raw / self.clamp)
+        return log_s, t
+
+    def forward(self, params, x, cond=None):
+        xa, xb = self._split(x)
+        log_s, t = self._scale_shift(params, xb, cond, xa.shape[-1])
+        if log_s is None:
+            ya = xa + t
+            ld = jnp.zeros((x.shape[0],), jnp.float32)
+        else:
+            ya = xa * jnp.exp(log_s) + t
+            ld = jnp.sum(
+                log_s.astype(jnp.float32), axis=tuple(range(1, log_s.ndim))
+            )
+        return self._merge(ya, xb), ld
+
+    def inverse(self, params, y, cond=None):
+        ya, yb = self._split(y)
+        if self.kernel_inverse and not self.additive:
+            h = self._net_out(params, yb, cond)
+            ca = ya.shape[-1]
+            raw, t = h[..., :ca], h[..., ca:]
+            xa = self._kernel_inv(ya, raw, t)
+            return self._merge(xa, yb)
+        log_s, t = self._scale_shift(params, yb, cond, ya.shape[-1])
+        xa = (ya - t) if log_s is None else (ya - t) * jnp.exp(-log_s)
+        return self._merge(xa, yb)
+
+    def _kernel_inv(self, ya, raw, t):
+        from repro.kernels.coupling.ops import fused_coupling_inv
+
+        shape = ya.shape
+        m = 1
+        for d in shape[1:-1]:
+            m *= d
+        flat = lambda v: v.reshape(shape[0], m, shape[-1])
+        block_m = m if m % 256 else 256
+        xa = fused_coupling_inv(
+            flat(ya), flat(raw), flat(t), clamp=self.clamp, block_m=block_m
+        )
+        return xa.reshape(shape)

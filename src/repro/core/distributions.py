@@ -1,0 +1,29 @@
+"""Base densities for normalizing flows."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_state(z) -> jax.Array:
+    """Flatten a latent pytree (array or tuple-of-arrays) to (B, D)."""
+    leaves = jax.tree_util.tree_leaves(z)
+    return jnp.concatenate([jnp.reshape(v, (v.shape[0], -1)) for v in leaves], axis=1)
+
+
+def std_normal_logpdf(z) -> jax.Array:
+    """log N(z; 0, I) per sample, over a latent pytree."""
+    flat = flatten_state(z).astype(jnp.float32)
+    d = flat.shape[1]
+    return -0.5 * jnp.sum(flat**2, axis=1) - 0.5 * d * math.log(2 * math.pi)
+
+
+def std_normal_sample(rng, like) -> jax.Array:
+    """Sample a latent pytree matching the structure/shapes of ``like``."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = jax.random.split(rng, len(leaves))
+    samples = [jax.random.normal(k, v.shape, v.dtype) for k, v in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, samples)

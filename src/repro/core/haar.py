@@ -1,0 +1,82 @@
+"""Haar wavelet multiscale transform [5] and plain squeeze.
+
+The orthonormal 2x2 Haar transform maps (B, H, W, C) -> (B, H/2, W/2, 4C)
+with |det| = 1 (logdet = 0); it is its own inverse on the 2x2 block basis.
+Used as the invertible down-sampling in GLOW-style multiscale flows and
+hyperbolic networks (channel change without losing information).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import Invertible
+
+
+def _blocks(x):
+    a = x[:, 0::2, 0::2, :]
+    b = x[:, 0::2, 1::2, :]
+    c = x[:, 1::2, 0::2, :]
+    d = x[:, 1::2, 1::2, :]
+    return a, b, c, d
+
+
+class HaarSqueeze(Invertible):
+    """Orthonormal Haar squeeze; involution on the block basis."""
+
+    def init(self, rng, x):
+        if x.shape[1] % 2 or x.shape[2] % 2:
+            raise ValueError(f"HaarSqueeze needs even H, W; got {x.shape}")
+        return {}
+
+    def forward(self, params, x, cond=None):
+        a, b, c, d = _blocks(x)
+        ll = (a + b + c + d) * 0.5
+        lh = (a - b + c - d) * 0.5
+        hl = (a + b - c - d) * 0.5
+        hh = (a - b - c + d) * 0.5
+        y = jnp.concatenate([ll, lh, hl, hh], axis=-1)
+        return y, jnp.zeros((x.shape[0],), jnp.float32)
+
+    def inverse(self, params, y, cond=None):
+        c4 = y.shape[-1]
+        assert c4 % 4 == 0
+        c = c4 // 4
+        ll, lh, hl, hh = (y[..., i * c : (i + 1) * c] for i in range(4))
+        a = (ll + lh + hl + hh) * 0.5
+        b = (ll - lh + hl - hh) * 0.5
+        cc = (ll + lh - hl - hh) * 0.5
+        d = (ll - lh - hl + hh) * 0.5
+        bsz, h2, w2, _ = y.shape
+        x = jnp.zeros((bsz, 2 * h2, 2 * w2, c), y.dtype)
+        x = x.at[:, 0::2, 0::2, :].set(a)
+        x = x.at[:, 0::2, 1::2, :].set(b)
+        x = x.at[:, 1::2, 0::2, :].set(cc)
+        x = x.at[:, 1::2, 1::2, :].set(d)
+        return x
+
+
+class Squeeze(Invertible):
+    """Plain space-to-depth squeeze (RealNVP); logdet = 0."""
+
+    def init(self, rng, x):
+        if x.shape[1] % 2 or x.shape[2] % 2:
+            raise ValueError(f"Squeeze needs even H, W; got {x.shape}")
+        return {}
+
+    def forward(self, params, x, cond=None):
+        a, b, c, d = _blocks(x)
+        y = jnp.concatenate([a, b, c, d], axis=-1)
+        return y, jnp.zeros((x.shape[0],), jnp.float32)
+
+    def inverse(self, params, y, cond=None):
+        c4 = y.shape[-1]
+        c = c4 // 4
+        a, b, cc, d = (y[..., i * c : (i + 1) * c] for i in range(4))
+        bsz, h2, w2, _ = y.shape
+        x = jnp.zeros((bsz, 2 * h2, 2 * w2, c), y.dtype)
+        x = x.at[:, 0::2, 0::2, :].set(a)
+        x = x.at[:, 0::2, 1::2, :].set(b)
+        x = x.at[:, 1::2, 0::2, :].set(cc)
+        x = x.at[:, 1::2, 1::2, :].set(d)
+        return x

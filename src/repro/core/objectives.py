@@ -1,0 +1,35 @@
+"""Training objectives for flows (maximum likelihood, amortized VI)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import flatten_state, std_normal_logpdf
+
+
+def nll_bits_per_dim(flow, params, x, cond=None, n_bins: float = 256.0):
+    """Negative log-likelihood in bits/dim (image-flow convention)."""
+    z, logdet = flow.forward(params, x, cond)
+    d = flatten_state(z).shape[1]
+    ll = std_normal_logpdf(z) + logdet
+    bpd = -(ll / d - jnp.log(n_bins)) / jnp.log(2.0)
+    return jnp.mean(bpd)
+
+
+def nll_loss(flow, params, x, cond=None):
+    """Plain mean NLL per dim (tabular/posterior flows)."""
+    z, logdet = flow.forward(params, x, cond)
+    d = flatten_state(z).shape[1]
+    return -jnp.mean(std_normal_logpdf(z) + logdet) / d
+
+
+def amortized_vi_loss(flow, params, theta, y_obs, summary=None, summary_params=None):
+    """BayesFlow-style amortized posterior loss: -log q(theta | s(y)).
+
+    ``summary`` is an arbitrary (non-invertible) summary network — its
+    gradients flow through plain AD while the flow itself uses the
+    memory-frugal engine (paper §4).
+    """
+    cond = y_obs if summary is None else summary.apply(summary_params, y_obs)
+    return nll_loss(flow, params, theta, cond)

@@ -1,0 +1,28 @@
+"""RealNVP [2] for dense / tabular inputs."""
+
+from __future__ import annotations
+
+from repro.core.actnorm import ActNorm
+from repro.core.chain import InvertibleChain
+from repro.core.coupling import AffineCoupling
+from repro.nn.nets import CouplingMLP
+
+
+def build_realnvp(
+    depth: int = 8,
+    hidden: int = 128,
+    mlp_depth: int = 2,
+    grad_mode: str = "invertible",
+    additive: bool = False,
+    clamp: float = 2.0,
+) -> InvertibleChain:
+    """ActNorm + alternating affine couplings; conditional if ``cond`` is
+    passed at call time (the conditioner consumes it)."""
+    factory = lambda d_out: CouplingMLP(d_out, hidden=hidden, depth=mlp_depth)
+    layers = []
+    for i in range(depth):
+        layers.append(ActNorm())
+        layers.append(
+            AffineCoupling(factory, flip=bool(i % 2), additive=additive, clamp=clamp)
+        )
+    return InvertibleChain(layers, grad_mode=grad_mode)

@@ -1,0 +1,78 @@
+"""The ``Invertible`` protocol — the package's core abstraction.
+
+A layer is *invertible by design*: it exposes ``forward`` (returning the
+output together with the per-sample log-determinant of its Jacobian) and
+``inverse``.  The memory-frugal backprop engine (``core.autodiff``) never asks
+a layer for its gradient — it reconstructs the layer *input* from the layer
+*output* via ``inverse`` and then differentiates ``forward`` locally, one
+layer live at a time.  This mirrors InvertibleNetworks.jl, where hand-written
+pullbacks consume the layer output.
+
+Conventions
+-----------
+* ``x`` / ``y`` are pytrees; for most layers they are single arrays with a
+  leading batch dimension.  Multiscale networks thread a ``(x, zs)`` state.
+* ``logdet`` has shape ``(batch,)`` — log |det ∂y/∂x| per sample.
+* ``cond`` is an optional conditioning pytree (conditional flows); layers
+  that do not use it must accept and ignore it.
+* Layers are *stateless*: parameters are explicit pytrees returned by
+  ``init`` and passed to every call.  Layer objects themselves hold only
+  static hyperparameters, so they can be closed over inside ``jit``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+PyTree = Any
+
+
+class Invertible:
+    """Base class for invertible layers/networks."""
+
+    # -- construction ----------------------------------------------------
+    def init(self, rng: jax.Array, x: PyTree) -> Params:
+        """Initialize parameters given an example input (or ShapeDtypeStruct)."""
+        raise NotImplementedError
+
+    # -- bijection -------------------------------------------------------
+    def forward(
+        self, params: Params, x: PyTree, cond: Optional[PyTree] = None
+    ) -> tuple[PyTree, jax.Array]:
+        raise NotImplementedError
+
+    def inverse(self, params: Params, y: PyTree, cond: Optional[PyTree] = None) -> PyTree:
+        raise NotImplementedError
+
+    # -- conveniences ------------------------------------------------------
+    def forward_only(self, params, x, cond=None):
+        return self.forward(params, x, cond)[0]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{type(self).__name__}()"
+
+
+def batch_of(x: PyTree) -> int:
+    """Leading (batch) dimension of a state pytree."""
+    leaves = jax.tree_util.tree_leaves(x)
+    return leaves[0].shape[0]
+
+
+def zero_logdet(x: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(x)
+    return jnp.zeros((leaves[0].shape[0],), dtype=jnp.result_type(leaves[0].dtype, jnp.float32))
+
+
+def example_array(x: PyTree) -> jax.Array:
+    """Materialize an example input for ``init`` from a ShapeDtypeStruct pytree."""
+
+    def _mk(v):
+        if isinstance(v, jax.ShapeDtypeStruct):
+            return jnp.zeros(v.shape, v.dtype)
+        return v
+
+    return jax.tree_util.tree_map(_mk, x)

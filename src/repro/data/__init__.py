@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    SyntheticImages,
+    SyntheticInverseProblem,
+    SyntheticTokens,
+)
+
+__all__ = ["SyntheticImages", "SyntheticInverseProblem", "SyntheticTokens"]

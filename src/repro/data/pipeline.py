@@ -1,0 +1,51 @@
+"""Host-side input pipeline: background prefetch over the step-indexed
+synthetic sources.
+
+The sources are pure functions of the step, so the prefetcher is just a
+bounded look-ahead thread — determinism and restartability are preserved
+(seeking = changing the next step index).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable
+
+
+class Prefetcher:
+    """Wraps ``batch_at(step)`` with a bounded background look-ahead."""
+
+    def __init__(self, batch_at: Callable[[int], Any], start_step: int = 0,
+                 lookahead: int = 2):
+        self._batch_at = batch_at
+        self._q: queue.Queue = queue.Queue(maxsize=lookahead)
+        self._next = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._next
+        while not self._stop.is_set():
+            try:
+                batch = self._batch_at(step)
+            except BaseException as e:
+                self._q.put(("error", e))
+                return
+            self._q.put(("ok", (step, batch)))
+            step += 1
+
+    def get(self) -> tuple[int, Any]:
+        kind, payload = self._q.get()
+        if kind == "error":
+            raise payload
+        return payload
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

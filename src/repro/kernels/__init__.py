@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel package provides:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling (TPU is the TARGET; validated with ``interpret=True`` on CPU)
+  * ``ops.py``    — the jit'd public wrapper (auto-selects interpret mode off-TPU)
+  * ``ref.py``    — the pure-jnp oracle the kernel is tested against
+
+Kernels:
+  * ``coupling``  — fused affine-coupling transform + logdet (flow hot spot)
+  * ``conv1x1``   — invertible 1x1 convolution channel matmul (flow hot spot)
+  * ``attention`` — flash attention forward (tiled online softmax, GQA)
+  * ``ssd``       — Mamba2 chunked SSD scan with VMEM-resident state
+  * ``rwkv``      — RWKV6 wkv recurrence with VMEM-resident state
+"""
+
+from repro.kernels.common import use_interpret
+
+__all__ = ["use_interpret"]

@@ -1,0 +1,14 @@
+"""Public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+from repro.kernels.attention.attention import flash_attention
+from repro.kernels.common import use_interpret
+
+
+def flash_sdpa(q, k, v, causal: bool = True, block_q: int = 128, block_k: int = 128):
+    """(B, Hq, S, D) x (B, Hkv, S, D) -> (B, Hq, S, D)."""
+    return flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=use_interpret(),
+    )

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * (d**-0.5)
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

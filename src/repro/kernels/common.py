@@ -1,0 +1,14 @@
+"""Shared kernel utilities."""
+
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,44 @@
+"""Invertible 1x1 convolution kernel: channel-mixing matmul on the MXU.
+
+``y[b, m, :] = x[b, m, :] @ W`` for W (C, C).  After GLOW's multiscale
+squeezes C reaches 48-768 — small against the 128x128 MXU tile, so the
+winning layout streams large position tiles (block_m rows) against a fully
+VMEM-resident W, rather than tiling W.  f32 accumulation via
+``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, y_ref):
+    x = x_ref[...]
+    w = w_ref[...].astype(x.dtype)
+    y = jax.lax.dot_general(
+        x[0], w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[...] = y[None].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def conv1x1_mm(x, w, *, block_m: int = 256, interpret: bool = True):
+    """x: (B, M, C); w: (C, C) -> (B, M, C)."""
+    b, m, c = x.shape
+    block_m = min(block_m, m)
+    assert m % block_m == 0, (m, block_m)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b, m // block_m),
+        in_specs=[
+            pl.BlockSpec((1, block_m, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((c, c), lambda i, j: (0, 0)),  # W resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((1, block_m, c), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m, c), x.dtype),
+        interpret=interpret,
+    )(x, w)

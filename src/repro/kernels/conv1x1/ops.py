@@ -1,0 +1,10 @@
+"""Public wrapper for the 1x1-conv kernel."""
+
+from __future__ import annotations
+
+from repro.kernels.common import use_interpret
+from repro.kernels.conv1x1.conv1x1 import conv1x1_mm
+
+
+def invertible_conv1x1(x, w, block_m: int = 256):
+    return conv1x1_mm(x, w, block_m=block_m, interpret=use_interpret())

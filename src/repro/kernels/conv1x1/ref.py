@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the 1x1-conv channel matmul.
+
+Matches the kernel's numerics contract: operands in the activation dtype,
+f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1x1_mm_ref(x, w):
+    y = jax.lax.dot_general(
+        x,
+        w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(x.dtype)

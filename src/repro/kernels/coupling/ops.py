@@ -1,0 +1,14 @@
+"""Public wrapper for the fused coupling kernel (auto interpret off-TPU)."""
+
+from __future__ import annotations
+
+from repro.kernels.common import use_interpret
+from repro.kernels.coupling.coupling import coupling_fwd, coupling_inv
+
+
+def fused_coupling_fwd(x, raw, t, clamp: float = 2.0, block_m: int = 256):
+    return coupling_fwd(x, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret())
+
+
+def fused_coupling_inv(y, raw, t, clamp: float = 2.0, block_m: int = 256):
+    return coupling_inv(y, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret())

@@ -1,0 +1,10 @@
+"""Public wrapper for the wkv6 kernel."""
+
+from __future__ import annotations
+
+from repro.kernels.common import use_interpret
+from repro.kernels.rwkv.rwkv import wkv_scan
+
+
+def rwkv6_wkv(r, k, v, w, u, chunk: int = 64):
+    return wkv_scan(r, k, v, w, u, chunk=chunk, interpret=use_interpret())

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the wkv6 recurrence."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (B,H,S,K); u: (H,K) -> (y: (B,H,S,K), state: (B,H,K,K))."""
+    bsz, h, s, kdim = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = (x.astype(jnp.float32) for x in inp)  # (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkj->bhj", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    seq = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, w))
+    state0 = jnp.zeros((bsz, h, kdim, kdim), jnp.float32)
+    state, y = lax.scan(step, state0, seq)
+    return y.transpose(1, 2, 0, 3), state

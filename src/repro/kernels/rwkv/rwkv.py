@@ -1,0 +1,88 @@
+"""RWKV6 wkv recurrence kernel.
+
+Grid: (batch, head, time-chunk) — the (K, K) state matrix stays in VMEM
+scratch across all chunks (the CUDA wkv kernels keep it in registers/smem;
+VMEM scratch + sequential grid is the TPU-native equivalent).  Within a
+chunk the recurrence is stepped with a ``fori_loop`` over VREG-resident
+rows — each step is rank-1 work (outer products), VPU-bound by design, so
+there is no MXU tiling to exploit; the win is keeping the state resident.
+
+    y_t = r_t · (S + u ⊙ (k_t ⊗ v_t));   S <- diag(w_t) S + k_t ⊗ v_t
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_ref, state_scr, *, chunk, nc):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (c, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (K,)
+
+    def step(t, carry):
+        s, y = carry  # (K,K), (c,K)
+        kv = k[t][:, None] * v[t][None, :]  # (K, K)
+        yt = jnp.sum(r[t][:, None] * (s + u[:, None] * kv), axis=0)  # (K,)
+        y = jax.lax.dynamic_update_index_in_dim(y, yt, t, 0)
+        s = w[t][:, None] * s + kv
+        return (s, y)
+
+    state, y = jax.lax.fori_loop(
+        0, chunk, step, (state_scr[...], jnp.zeros_like(r))
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    state_scr[...] = state
+
+    @pl.when(ic == nc - 1)
+    def _emit():
+        st_ref[0, 0] = state.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
+    """r,k,v,w: (B, H, S, K); u: (H, K).
+
+    Returns (y: (B,H,S,K) f32, final_state: (B,H,K,K) f32).
+    """
+    bsz, h, s, kdim = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, nc=nc)
+    tile = pl.BlockSpec((1, 1, chunk, kdim), lambda b_, h_, c_: (b_, h_, c_, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            tile,
+            tile,
+            tile,
+            tile,
+            pl.BlockSpec((1, kdim), lambda b_, h_, c_: (h_, 0)),
+        ],
+        out_specs=[
+            tile,
+            pl.BlockSpec((1, 1, kdim, kdim), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, kdim), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, kdim, kdim), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kdim, kdim), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

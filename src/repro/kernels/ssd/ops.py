@@ -1,0 +1,10 @@
+"""Public wrapper for the SSD kernel."""
+
+from __future__ import annotations
+
+from repro.kernels.common import use_interpret
+from repro.kernels.ssd.ssd import ssd_scan
+
+
+def mamba2_ssd(x, da, dt, b_in, c_in, chunk: int = 128):
+    return ssd_scan(x, da, dt, b_in, c_in, chunk=chunk, interpret=use_interpret())

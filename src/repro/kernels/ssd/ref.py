@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD kernel: naive sequential recurrence."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, da, dt, b_in, c_in):
+    """x: (B,H,S,P); da, dt: (B,H,S); b_in, c_in: (B,S,N).
+
+    h_t = exp(da_t) h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = h_t @ C_t
+    Returns (y: (B,H,S,P), state: (B,H,P,N)), all f32.
+    """
+    bsz, h, s, p = x.shape
+    n = b_in.shape[-1]
+
+    def step(state, inp):
+        xt, dat, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H), (B,N), (B,N)
+        state = state * jnp.exp(dat)[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt, bt, dtt
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    seq = (
+        x.transpose(2, 0, 1, 3),
+        da.transpose(2, 0, 1),
+        dt.transpose(2, 0, 1),
+        b_in.swapaxes(0, 1),
+        c_in.swapaxes(0, 1),
+    )
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    state, y = lax.scan(step, state0, seq)
+    return y.transpose(1, 2, 0, 3), state

@@ -1,0 +1,361 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Only this process sees 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes, with zero device allocation
+(ShapeDtypeStruct inputs), and record memory/cost/collective artifacts for
+the roofline analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+
+Each cell writes ``artifacts/dryrun/<arch>__<shape>__<mesh>[__variant].json``
+containing ``compiled.memory_analysis()``, ``compiled.cost_analysis()`` and
+the collective-traffic breakdown parsed from the optimized HLO.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES, ShapeSpec, TrainConfig, get_arch, supports_shape
+from repro.dist.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_pspecs,
+    params_pspecs,
+    to_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, input_specs
+from repro.optim import adamw_init, adamw_update, cosine_warmup
+from repro.utils.hlo import hlo_cost, top_collectives
+
+
+def make_train_step(model, tcfg: TrainConfig, grad_mode=None, grad_specs=None,
+                    layer_constraint=None):
+    def step(state, batch):
+        def lf(p):
+            return model.train_loss(p, batch, grad_mode=grad_mode,
+                                    layer_constraint=layer_constraint)
+
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        if grad_specs is not None:
+            # ZeRO-1 (§Perf/H4): land gradients directly in the moment
+            # sharding — the DP all-reduce becomes a reduce-scatter and the
+            # optimizer update runs on 1/dp-th of each tensor per device.
+            grads = jax.tree_util.tree_map(
+                lambda g, sp: g
+                if (sp is None or not hasattr(g, "dtype")
+                    or not jnp.issubdtype(g.dtype, jnp.inexact))
+                else jax.lax.with_sharding_constraint(g, sp),
+                grads,
+                grad_specs,
+                is_leaf=lambda x: x is None,
+            )
+        lr = cosine_warmup(state["opt"]["step"], tcfg.lr, tcfg.warmup_steps, tcfg.steps)
+        params, opt, _ = adamw_update(state["params"], grads, state["opt"], tcfg, lr)
+        return {"params": params, "opt": opt}, loss
+
+    return step
+
+
+VARIANT_TOKENS = ("standard", "coupled", "bf16res", "wkvchunk", "zero1",
+                  "attnseq", "servefix", "fsdp")
+
+
+def parse_variant(variant: str):
+    """Variant string: '-'-joined tokens, e.g. 'coupled-bf16res'.
+
+    standard  -> reversible=False (naive-AD architecture baseline)
+    coupled   -> fused reversible backward (§Perf/H1)
+    bf16res   -> bf16 residual streams (§Perf/H2)
+    wkvchunk  -> chunked rwkv wkv scan (§Perf/H3)
+    zero1     -> ZeRO-1 optimizer-state sharding (§Perf/H4)
+    attnseq   -> sequence-parallel attention (§Perf/H6)
+    servefix  -> bf16 serving weights + seq-sharded KV fallback (§Perf/H5)
+    fsdp      -> params+moments sharded over data axes too (§Perf/H7)
+    """
+    tokens = [t for t in variant.split("-") if t]
+    for t in tokens:
+        if t not in VARIANT_TOKENS:
+            raise ValueError(f"unknown variant token {t!r}")
+    opts = {
+        "overrides": {},
+        "grad_mode": None,
+        "zero1": "zero1" in tokens,
+        "serve_bf16": "servefix" in tokens,
+        "cache_seq_fallback": "servefix" in tokens,
+        "fsdp": "fsdp" in tokens,
+    }
+    if "standard" in tokens:
+        opts["overrides"]["reversible"] = False
+    if "coupled" in tokens:
+        opts["grad_mode"] = "coupled"
+    if "bf16res" in tokens:
+        opts["overrides"]["residual_dtype"] = "bfloat16"
+    if "attnseq" in tokens:
+        opts["overrides"]["attn_seq_shard"] = True
+    return opts
+
+
+def _maybe_wkvchunk(cfg, variant):
+    if "wkvchunk" in variant and cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        import dataclasses
+
+        return cfg.replace(ssm=dataclasses.replace(cfg.ssm, wkv_chunk=32))
+    return cfg
+
+
+def lower_cell(arch: str, shape: ShapeSpec, mesh, mesh_name: str, variant: str = ""):
+    """Lower+compile one cell; returns the artifact dict."""
+    opts = parse_variant(variant)
+    model, cfg = build_model(arch, **opts["overrides"])
+    if "wkvchunk" in variant:
+        cfg = _maybe_wkvchunk(cfg, variant)
+        from repro.models.lm import Model
+
+        model = Model(cfg)
+    t0 = time.time()
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)  # key placeholder for eval_shape
+
+    params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if opts["serve_bf16"] and shape.kind != "train":
+        # serving deployments hold bf16 weights (§Perf/H5)
+        params_spec = jax.tree_util.tree_map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, jnp.bfloat16)
+            if v.dtype == jnp.float32
+            else v,
+            params_spec,
+        )
+    p_specs = params_pspecs(params_spec, mesh, fsdp=opts["fsdp"])
+    batch_spec = input_specs(cfg, shape)
+    b_specs = batch_pspecs(batch_spec, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            tcfg = TrainConfig()
+            opt_spec = jax.eval_shape(adamw_init, params_spec)
+            o_specs = opt_pspecs(opt_spec, p_specs, mesh, zero1=opts["zero1"])
+            grad_specs = o_specs["mu"] if opts["zero1"] else None
+            layer_constraint = None
+            if opts["fsdp"]:
+                from repro.dist.sharding import layer_slice_pspecs
+
+                layer_constraint = layer_slice_pspecs(params_spec["blocks"], mesh)
+            step = make_train_step(model, tcfg, grad_mode=opts["grad_mode"],
+                                   grad_specs=grad_specs,
+                                   layer_constraint=layer_constraint)
+            state_spec = {"params": params_spec, "opt": opt_spec}
+            state_sh = to_shardings({"params": p_specs, "opt": o_specs}, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, to_shardings(b_specs, mesh)),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_spec, batch_spec)
+        elif shape.kind == "prefill":
+            caches_spec = jax.eval_shape(
+                lambda: model.make_caches(shape.global_batch, shape.seq_len)
+            )
+            c_specs = cache_pspecs(
+                caches_spec, mesh, seq_fallback_model=opts["cache_seq_fallback"]
+            )
+
+            def step(params, batch, caches):
+                return model.prefill(params, batch, caches)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    to_shardings(p_specs, mesh),
+                    to_shardings(b_specs, mesh),
+                    to_shardings(c_specs, mesh),
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_spec, batch_spec, caches_spec)
+        else:  # decode
+            caches_spec = jax.eval_shape(
+                lambda: model.make_caches(shape.global_batch, shape.seq_len)
+            )
+            c_specs = cache_pspecs(
+                caches_spec, mesh, seq_fallback_model=opts["cache_seq_fallback"]
+            )
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            extra_spec = None
+            extra_sh = None
+            if cfg.is_enc_dec:
+                extra_spec = {
+                    "enc": jax.ShapeDtypeStruct(
+                        (shape.global_batch, cfg.frontend.n_frames, cfg.d_model),
+                        jnp.dtype(cfg.dtype),
+                    )
+                }
+                extra_sh = to_shardings(batch_pspecs(extra_spec, mesh), mesh)
+
+            def step(params, tokens, caches, pos0, extra):
+                return model.decode_step(params, tokens, caches, pos0, extra)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    to_shardings(p_specs, mesh),
+                    to_shardings(b_specs["tokens"], mesh),
+                    to_shardings(c_specs, mesh),
+                    None,
+                    extra_sh,
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                params_spec, batch_spec["tokens"], caches_spec, pos_spec, extra_spec
+            )
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    walk = hlo_cost(hlo)  # trip-count-scaled (scan bodies x L)
+    coll = dict(walk.collectives)
+    coll["total"] = walk.coll_total
+    coll["count"] = walk.coll_count
+    top = [
+        {"bytes": b, "scale": sc, "kind": k, "line": ln[:220]}
+        for b, sc, k, ln in top_collectives(hlo, 8)
+    ]
+
+    n_params = cfg.param_count()
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+
+    return {
+        "arch": arch,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": mesh_name,
+        "variant": variant or "reversible",
+        "ok": True,
+        "seconds_lower": round(t_lower, 2),
+        "seconds_compile": round(t_compile, 2),
+        "n_devices": mesh.size,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "cost": {
+            "flops": walk.flops,
+            "bytes_accessed": walk.bytes,
+            "flops_xla_unscaled": cost.get("flops", 0.0),
+            "bytes_xla_unscaled": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": coll,
+        "top_collectives": top,
+        "model": {
+            "params_total": n_params,
+            "params_active": n_active,
+            "tokens_per_step": tokens,
+            "model_flops": 6.0 * n_active * tokens,
+        },
+    }
+
+
+def run(args):
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    archs = args.arch.split(",")
+    if args.arch == "all":
+        from repro.configs import ASSIGNED_ARCHS
+
+        archs = list(ASSIGNED_ARCHS)
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+
+    os.makedirs(args.out, exist_ok=True)
+    suffix = f"__{args.variant}" if args.variant else ""
+
+    results = []
+    for arch in archs:
+        cfg = get_arch(arch).config
+        for shape_name in shapes:
+            shape = SHAPES[shape_name]
+            for mesh_name, mesh in meshes:
+                tag = f"{arch}__{shape_name}__{mesh_name}{suffix}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                if not supports_shape(cfg, shape):
+                    art = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "ok": True, "skipped": True,
+                        "reason": "long_500k requires sub-quadratic attention "
+                                  "(full-attention arch; see DESIGN.md)",
+                    }
+                    with open(path, "w") as f:
+                        json.dump(art, f, indent=1)
+                    print(f"[skip] {tag} (inapplicable shape)")
+                    continue
+                print(f"[lower+compile] {tag} ...", flush=True)
+                t0 = time.time()
+                try:
+                    art = lower_cell(arch, shape, mesh, mesh_name,
+                                     variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    art = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+                status = "ok" if art.get("ok") else "FAIL"
+                print(f"  -> {status} in {time.time()-t0:.1f}s", flush=True)
+                if art.get("ok") and "memory" in art:
+                    m = art["memory"]
+                    print(
+                        f"     mem/device: args {m['argument_bytes']/2**30:.2f} GiB, "
+                        f"temp {m['temp_bytes']/2**30:.2f} GiB; "
+                        f"flops/device {art['cost']['flops']:.3g}; "
+                        f"collective {art['collectives']['total']/2**20:.1f} MiB",
+                        flush=True,
+                    )
+                results.append(art)
+    n_fail = sum(1 for r in results if not r.get("ok"))
+    print(f"\ndone: {len(results)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--variant", default="",
+                    help="'-'-joined tokens: standard coupled bf16res wkvchunk "
+                         "zero1 attnseq servefix (see parse_variant)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    raise SystemExit(run(args))
+
+
+if __name__ == "__main__":
+    main()

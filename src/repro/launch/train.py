@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --steps 50 --seq 128 --batch 8 [--grad-mode coupled] [--mesh d,m]
+
+On a real cluster this process runs per host under the job scheduler
+(restart-on-failure is handled by the in-loop supervisor + checkpoints);
+``--mesh`` shards the step over the local devices via the same sharding
+rules as the production dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config import ShapeSpec, TrainConfig, get_arch
+from repro.data import SyntheticTokens
+from repro.models import build_model
+from repro.train import train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-mode", default=None,
+                    choices=[None, "invertible", "coupled", "remat", "autodiff"])
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--ckpt", default="checkpoints/train")
+    ap.add_argument("--step-timeout", type=float, default=0.0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg_model = spec.reduced if args.reduced else spec.config
+    model, cfg = build_model(cfg_model)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"reversible={cfg.reversible} devices={jax.device_count()}")
+
+    data = SyntheticTokens(cfg.vocab_size, args.seq, args.batch, seed=0)
+    tcfg = TrainConfig(
+        steps=args.steps, lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+        checkpoint_every=max(args.steps // 4, 10), checkpoint_dir=args.ckpt,
+        grad_compression=args.grad_compression, step_timeout_s=args.step_timeout,
+    )
+    res = train_lm(model, data, tcfg, grad_mode=args.grad_mode,
+                   log_every=max(args.steps // 10, 1))
+    print(f"done at step {res.final_step}: loss {res.losses[0]:.4f} -> "
+          f"{res.losses[-1]:.4f}; restarts={res.restarts}; "
+          f"straggler flags={len(res.flagged_steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.lm import Model
+from repro.models.registry import build_model, input_specs
+
+__all__ = ["Model", "build_model", "input_specs"]

@@ -1,0 +1,396 @@
+"""Transformer superblocks: the scan unit of every architecture.
+
+A *superblock* is the smallest repeating parameter pattern of a model:
+
+* dense archs                — 1 block  (attention + FFN)
+* granite-moe                — 1 block  (attention + MoE)
+* llama4-maverick            — 2 blocks (attention+FFN, attention+MoE) — MoE
+                               interleave=2 with homogeneous scan params
+* rwkv6                      — 1 block  (time-mix + channel-mix)
+* zamba2 (hybrid)            — 6 Mamba2 blocks + 1 *shared* attention
+                               application (shared weights live in ``extra``;
+                               only the application's norm + KV cache are
+                               per-superblock)
+* whisper encoder / decoder  — attention(+cross)+MLP blocks
+
+Each superblock is a sequence of residual *units*.  In reversible mode the
+units alternate over the two coupling streams (NICE additive coupling — the
+paper's technique, see DESIGN.md §3):
+
+    x1 += u_0(x2);  x2 += u_1(x1);  x1 += u_2(x2);  ...
+
+which is exactly invertible, enabling O(1)-in-depth activation memory via
+``repro.core.autodiff.make_scan_apply``.  In standard mode units apply
+sequentially to a single stream (the naive-AD baseline).
+
+Units return ``(residual_delta, new_cache, aux)``; ``aux`` is a per-sample
+(B,) vector threaded through the scan engine's logdet/aux channel (used by
+the MoE load-balance loss).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.nn.attention import attn_apply, attn_init, cross_kv, make_cache
+from repro.nn.mlp import ffn_apply, ffn_init
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.norm import rmsnorm
+from repro.nn.ssm import (
+    mamba2_apply,
+    mamba2_init,
+    mamba2_state,
+    rwkv6_channel_mix,
+    rwkv6_init,
+    rwkv6_state,
+    rwkv6_time_mix,
+)
+
+
+class Ctx(NamedTuple):
+    """Per-call context handed to every unit."""
+
+    positions: jax.Array  # (S,) absolute positions of this call's tokens
+    pos0: jax.Array  # scalar: cache write offset (decode/prefill)
+    extra: Any  # shared differentiable inputs (enc output, shared attn, ...)
+    layer_idx: jax.Array  # superblock index within the stack
+    use_cache: bool
+
+
+class Unit(NamedTuple):
+    name: str
+    init: Callable[[jax.Array], dict]
+    # (params, x, cache, ctx) -> (delta, new_cache, aux | None)
+    apply: Callable[[dict, jax.Array, Any, Ctx], tuple]
+    # (batch, max_len) -> cache pytree ({} if stateless)
+    make_cache: Callable[[int, int], Any]
+
+
+def _norm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Unit builders
+# ---------------------------------------------------------------------------
+
+
+def attention_unit(cfg: ModelConfig, name: str = "attn", *, causal=None,
+                   shared: bool = False, cross: bool = False) -> Unit:
+    acfg = cfg.attention
+    if causal is not None:
+        import dataclasses
+
+        acfg = dataclasses.replace(acfg, causal=causal)
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        p = {"norm": _norm_init(d)}
+        if not shared:
+            p["attn"] = attn_init(rng, d, acfg)
+        return p
+
+    def apply(p, x, cache, ctx: Ctx):
+        h = rmsnorm(x.astype(dtype), p["norm"], cfg.norm_eps)
+        weights = ctx.extra["shared_attn"] if shared else p["attn"]
+        if cross:
+            kv = cross_kv(weights, ctx.extra["enc"].astype(dtype), acfg)
+            out, _ = attn_apply(weights, h, acfg, ctx.positions, kv_override=kv)
+            return out, cache, None
+        if ctx.use_cache:
+            out, new_cache = attn_apply(
+                weights, h, acfg, ctx.positions, cache=cache, cache_pos=ctx.pos0,
+                seq_shard=cfg.attn_seq_shard,
+            )
+            return out, new_cache, None
+        out, _ = attn_apply(
+            weights, h, acfg, ctx.positions, seq_shard=cfg.attn_seq_shard
+        )
+        return out, cache, None
+
+    def mk_cache(batch, max_len):
+        if cross:
+            return {}
+        return make_cache(acfg, batch, max_len, dtype)
+
+    return Unit(name, init, apply, mk_cache)
+
+
+def ffn_unit(cfg: ModelConfig, name: str = "ffn", *, shared: bool = False) -> Unit:
+    d, dff, kind = cfg.d_model, cfg.d_ff, cfg.ffn_kind
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        p = {"norm": _norm_init(d)}
+        if not shared:
+            p["ffn"] = ffn_init(rng, d, dff, kind)
+        return p
+
+    def apply(p, x, cache, ctx: Ctx):
+        h = rmsnorm(x.astype(dtype), p["norm"], cfg.norm_eps)
+        weights = ctx.extra["shared_ffn"] if shared else p["ffn"]
+        return ffn_apply(weights, h, kind), cache, None
+
+    return Unit(name, init, apply, lambda b, m: {})
+
+
+def moe_unit(cfg: ModelConfig, name: str = "moe") -> Unit:
+    d, mcfg, kind = cfg.d_model, cfg.moe, cfg.ffn_kind
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        return {"norm": _norm_init(d), "moe": moe_init(rng, d, mcfg, kind)}
+
+    def apply(p, x, cache, ctx: Ctx):
+        h = rmsnorm(x.astype(dtype), p["norm"], cfg.norm_eps)
+        y, aux = moe_apply(p["moe"], h, mcfg, kind)
+        return y, cache, aux
+
+    return Unit(name, init, apply, lambda b, m: {})
+
+
+def mamba_unit(cfg: ModelConfig, name: str = "mamba") -> Unit:
+    d, scfg = cfg.d_model, cfg.ssm
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        return {"norm": _norm_init(d), "mamba": mamba2_init(rng, d, scfg)}
+
+    def apply(p, x, cache, ctx: Ctx):
+        h = rmsnorm(x.astype(dtype), p["norm"], cfg.norm_eps)
+        state = cache if ctx.use_cache else None
+        y, new_state = mamba2_apply(p["mamba"], h, scfg, state)
+        return y, (new_state if ctx.use_cache else cache), None
+
+    def mk_cache(batch, max_len):
+        return mamba2_state(scfg, d, batch, dtype)
+
+    return Unit(name, init, apply, mk_cache)
+
+
+_RWKV_TIME_KEYS = ("mu", "wr", "wk", "wv", "wg", "w0", "wa", "wb", "u", "ln", "wo")
+_RWKV_CHAN_KEYS = ("cm_mu", "cm_wk", "cm_wv", "cm_wr")
+
+
+def rwkv_time_unit(cfg: ModelConfig) -> Unit:
+    d, scfg = cfg.d_model, cfg.ssm
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        full = rwkv6_init(rng, d, scfg, cfg.d_ff)
+        return {"norm": _norm_init(d), "rwkv": {k: full[k] for k in _RWKV_TIME_KEYS}}
+
+    def apply(p, x, cache, ctx: Ctx):
+        h = rmsnorm(x.astype(dtype), p["norm"], cfg.norm_eps)
+        state = cache.get("time") if ctx.use_cache else None
+        y, new_state = rwkv6_time_mix(p["rwkv"], h, scfg, state)
+        new_cache = cache if not ctx.use_cache else {**cache, "time": new_state}
+        return y, new_cache, None
+
+    def mk_cache(batch, max_len):
+        return {"time": rwkv6_state(scfg, d, batch, dtype)["time"]}
+
+    return Unit("time_mix", init, apply, mk_cache)
+
+
+def rwkv_channel_unit(cfg: ModelConfig) -> Unit:
+    d, scfg = cfg.d_model, cfg.ssm
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        full = rwkv6_init(rng, d, scfg, cfg.d_ff)
+        return {"norm": _norm_init(d), "rwkv": {k: full[k] for k in _RWKV_CHAN_KEYS}}
+
+    def apply(p, x, cache, ctx: Ctx):
+        h = rmsnorm(x.astype(dtype), p["norm"], cfg.norm_eps)
+        state = cache.get("chan") if ctx.use_cache else None
+        y, new_state = rwkv6_channel_mix(p["rwkv"], h, state)
+        new_cache = cache if not ctx.use_cache else {**cache, "chan": new_state}
+        return y, new_cache, None
+
+    def mk_cache(batch, max_len):
+        return {"chan": rwkv6_state(scfg, d, batch, dtype)["chan"]}
+
+    return Unit("chan_mix", init, apply, mk_cache)
+
+
+# ---------------------------------------------------------------------------
+# Superblock = ordered unit list + coupling machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SuperBlock:
+    units: tuple[Unit, ...]
+    n_super: int  # number of scanned superblocks
+
+    # -- params / cache ------------------------------------------------------
+    def init_one(self, rng):
+        keys = jax.random.split(rng, len(self.units))
+        return {u.name: u.init(k) for u, k in zip(self.units, keys)}
+
+    def init_stacked(self, rng):
+        keys = jax.random.split(rng, self.n_super)
+        return jax.vmap(self.init_one)(keys)
+
+    def make_caches(self, batch: int, max_len: int):
+        one = {u.name: u.make_cache(batch, max_len) for u in self.units}
+        return jax.tree_util.tree_map(
+            lambda v: jnp.zeros((self.n_super,) + v.shape, v.dtype), one
+        )
+
+    # -- forward (reversible coupling over (x1, x2)) ---------------------------
+    def fwd_pair(self, p, state, cache, ctx: Ctx):
+        x1, x2 = state
+        aux = jnp.zeros((x1.shape[0],), jnp.float32)
+        new_cache = dict(cache) if cache else {}
+        for j, u in enumerate(self.units):
+            src = x2 if j % 2 == 0 else x1
+            delta, c, a = u.apply(p[u.name], src, (cache or {}).get(u.name, {}), ctx)
+            if cache:
+                new_cache[u.name] = c
+            if a is not None:
+                aux = aux + a
+            if j % 2 == 0:
+                x1 = x1 + delta.astype(x1.dtype)
+            else:
+                x2 = x2 + delta.astype(x2.dtype)
+        return (x1, x2), new_cache, aux
+
+    def inv_pair(self, p, state, ctx: Ctx):
+        x1, x2 = state
+        for j in range(len(self.units) - 1, -1, -1):
+            u = self.units[j]
+            src = x2 if j % 2 == 0 else x1
+            delta, _, _ = u.apply(p[u.name], src, {}, ctx)
+            if j % 2 == 0:
+                x1 = x1 - delta.astype(x1.dtype)
+            else:
+                x2 = x2 - delta.astype(x2.dtype)
+        return (x1, x2)
+
+    def bwd_pair_fused(self, p, state, gstate, gld, ctx: Ctx):
+        """Fused reversible backward (beyond-paper; EXPERIMENTS.md §Perf/H1).
+
+        The generic engine runs inverse (1 fwd-eq) + local VJP (1 fwd-eq +
+        transpose).  But for additive coupling the inverse *is* the same unit
+        evaluation the VJP needs: one ``jax.vjp`` per unit both reconstructs
+        the input stream and yields the gradients — 4/3 fwd-equivalents
+        total instead of 5/3.
+
+        Returns ``(x_state, gx_state, gparams, gextra)``.
+        """
+        import jax as _jax
+
+        x1, x2 = state
+        g1, g2 = gstate
+        gparams = {}
+        gextra = None
+        for j in range(len(self.units) - 1, -1, -1):
+            u = self.units[j]
+
+            def f(pu, s, e, _u=u):
+                delta, _, aux = _u.apply(pu, s, {}, ctx._replace(extra=e))
+                if aux is None:
+                    aux = jnp.zeros((s.shape[0],), jnp.float32)
+                return delta, aux
+
+            if j % 2 == 1:  # unit read x1, wrote x2
+                (delta, _), vjp = _jax.vjp(f, p[u.name], x1, ctx.extra)
+                x2 = x2 - delta.astype(x2.dtype)
+                gp, gsrc, ge = vjp((g2.astype(delta.dtype), gld))
+                g1 = g1 + gsrc.astype(g1.dtype)
+            else:  # unit read x2, wrote x1
+                (delta, _), vjp = _jax.vjp(f, p[u.name], x2, ctx.extra)
+                x1 = x1 - delta.astype(x1.dtype)
+                gp, gsrc, ge = vjp((g1.astype(delta.dtype), gld))
+                g2 = g2 + gsrc.astype(g2.dtype)
+            gparams[u.name] = gp
+            if ge is not None:
+                gextra = ge if gextra is None else jax.tree_util.tree_map(
+                    jnp.add, gextra, ge
+                )
+        return (x1, x2), (g1, g2), gparams, gextra
+
+    # -- forward (standard single-stream; the naive-AD baseline) ---------------
+    def fwd_std(self, p, x, cache, ctx: Ctx):
+        aux = jnp.zeros((x.shape[0],), jnp.float32)
+        new_cache = dict(cache) if cache else {}
+        for u in self.units:
+            delta, c, a = u.apply(p[u.name], x, (cache or {}).get(u.name, {}), ctx)
+            if cache:
+                new_cache[u.name] = c
+            if a is not None:
+                aux = aux + a
+            x = x + delta.astype(x.dtype)
+        return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Architecture -> superblock layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StackLayout:
+    main: SuperBlock
+    tail: Optional[SuperBlock] = None  # zamba2 remainder blocks
+    has_shared_attn: bool = False
+
+
+def decoder_layout(cfg: ModelConfig) -> StackLayout:
+    """Superblock layout for the decoder (or decoder-only) stack."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        units = (attention_unit(cfg), ffn_unit(cfg))
+        return StackLayout(SuperBlock(units, cfg.n_layers))
+    if fam == "moe":
+        inter = cfg.moe.interleave
+        if inter == 1:
+            units = (attention_unit(cfg), moe_unit(cfg))
+            return StackLayout(SuperBlock(units, cfg.n_layers))
+        assert inter == 2 and cfg.n_layers % 2 == 0
+        units = (
+            attention_unit(cfg, "attn0"),
+            ffn_unit(cfg, "ffn0"),
+            attention_unit(cfg, "attn1"),
+            moe_unit(cfg, "moe1"),
+        )
+        return StackLayout(SuperBlock(units, cfg.n_layers // 2))
+    if fam == "ssm" and cfg.ssm.kind == "rwkv6":
+        units = (rwkv_time_unit(cfg), rwkv_channel_unit(cfg))
+        return StackLayout(SuperBlock(units, cfg.n_layers))
+    if fam == "hybrid":
+        # zamba2: k Mamba2 blocks, then one application of the *shared*
+        # transformer block (attention + FFN, weights in ``extra``)
+        k = cfg.hybrid_attn_every
+        n_main, n_tail = cfg.n_layers // k, cfg.n_layers % k
+        units = tuple(mamba_unit(cfg, f"mamba{i}") for i in range(k)) + (
+            attention_unit(cfg, "shared_attn", shared=True),
+            ffn_unit(cfg, "shared_ffn", shared=True),
+        )
+        main = SuperBlock(units, n_main)
+        tail = None
+        if n_tail:
+            t_units = tuple(mamba_unit(cfg, f"mamba{i}") for i in range(n_tail))
+            tail = SuperBlock(t_units, 1)
+        return StackLayout(main, tail, has_shared_attn=True)
+    if fam == "audio":  # whisper decoder
+        units = (
+            attention_unit(cfg, "self_attn"),
+            attention_unit(cfg, "cross_attn", cross=True),
+            ffn_unit(cfg),
+        )
+        return StackLayout(SuperBlock(units, cfg.n_layers))
+    raise ValueError(f"no layout for family {fam}")
+
+
+def encoder_layout(cfg: ModelConfig) -> StackLayout:
+    units = (attention_unit(cfg, causal=False), ffn_unit(cfg))
+    return StackLayout(SuperBlock(units, cfg.encoder_layers))

@@ -1,0 +1,287 @@
+"""The production model: decoder-only / encoder-decoder LMs over reversible
+(or standard) superblock stacks.
+
+The layer stack runs through ``repro.core.autodiff.make_scan_apply`` — the
+paper's recompute-by-inversion engine — when ``cfg.reversible`` (grad_mode
+"invertible").  ``grad_mode`` can be forced to "autodiff"/"remat" to obtain
+the naive-AD and gradient-checkpointing baselines on the *same weights*.
+
+Entry points:
+  * ``train_loss(params, batch)``      — scalar loss (+ metrics)
+  * ``prefill(params, batch, caches)`` — populate caches, last-position logits
+  * ``decode_step(params, tokens, caches, pos0)`` — one-token serve step
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.core.autodiff import make_scan_apply
+from repro.models.blocks import Ctx, StackLayout, decoder_layout, encoder_layout
+from repro.models.frontends import frontend_apply, frontend_init
+from repro.models.losses import chunked_softmax_xent
+from repro.nn.attention import attn_init
+from repro.nn.mlp import ffn_init
+from repro.nn.norm import rmsnorm
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.layout: StackLayout = decoder_layout(cfg)
+        self.enc_layout: Optional[StackLayout] = (
+            encoder_layout(cfg) if cfg.is_enc_dec else None
+        )
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(rng, 8)
+        params: dict[str, Any] = {
+            "embed": (cfg.d_model**-0.5)
+            * jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32),
+            "blocks": self.layout.main.init_stacked(keys[1]),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (cfg.d_model**-0.5) * jax.random.normal(
+                keys[2], (cfg.d_model, cfg.vocab_size), jnp.float32
+            )
+        if self.layout.tail is not None:
+            params["tail_blocks"] = self.layout.tail.init_one(keys[3])
+        if self.layout.has_shared_attn:
+            params["shared_attn"] = attn_init(keys[4], cfg.d_model, cfg.attention)
+            params["shared_ffn"] = ffn_init(keys[7], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+        if cfg.frontend is not None:
+            params["frontend"] = frontend_init(keys[5], cfg)
+        if self.enc_layout is not None:
+            params["encoder"] = self.enc_layout.main.init_stacked(keys[6])
+            params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        return params
+
+    # ------------------------------------------------------------------
+    # stack runners
+    # ------------------------------------------------------------------
+    def _grad_mode(self, override: Optional[str]) -> str:
+        if override is not None:
+            return override
+        return "invertible" if self.cfg.reversible else "remat"
+
+    def _stack_nocache(self, sb, stacked, h, extra, seq_len, grad_mode,
+                       layer_constraint=None):
+        """Run a superblock stack without caches (train / encoder).
+
+        ``layer_constraint``: optional PartitionSpec tree for the *per-layer
+        parameter slice* — applied inside the scan body so FSDP-sharded
+        weights are all-gathered one layer at a time (§Perf/H7)."""
+        cfg = self.cfg
+        positions = jnp.arange(seq_len)
+        pos0 = jnp.zeros((), jnp.int32)
+
+        def _lc(p):
+            if layer_constraint is None:
+                return p
+            return jax.tree_util.tree_map(
+                lambda v, sp: jax.lax.with_sharding_constraint(v, sp),
+                p, layer_constraint,
+            )
+
+        if cfg.reversible:
+            def step_fwd(p, state, ex, i):
+                ctx = Ctx(positions, pos0, ex, i, False)
+                state, _, aux = sb.fwd_pair(_lc(p), state, {}, ctx)
+                return state, aux
+
+            def step_inv(p, state, ex, i):
+                ctx = Ctx(positions, pos0, ex, i, False)
+                return sb.inv_pair(_lc(p), state, ctx)
+
+            def step_bwd(p, y, gy, gld, ex, i):
+                ctx = Ctx(positions, pos0, ex, i, False)
+                return sb.bwd_pair_fused(_lc(p), y, gy, gld, ctx)
+
+            apply = make_scan_apply(step_fwd, step_inv, grad_mode, step_bwd=step_bwd)
+            rdt = jnp.dtype(cfg.residual_dtype)
+            state = (h.astype(rdt), h.astype(rdt))
+            (x1, x2), aux = apply(stacked, state, extra)
+            return ((x1 + x2) * 0.5).astype(jnp.dtype(cfg.dtype)), aux
+
+        def step_fwd(p, x, ex, i):
+            ctx = Ctx(positions, pos0, ex, i, False)
+            x, _, aux = sb.fwd_std(_lc(p), x, {}, ctx)
+            return x, aux
+
+        mode = grad_mode if grad_mode in ("autodiff", "remat") else "remat"
+        apply = make_scan_apply(step_fwd, None, mode)
+        x, aux = apply(stacked, h.astype(jnp.dtype(cfg.dtype)), extra)
+        return x, aux
+
+    def _stack_cache(self, sb, stacked, caches, h, extra, pos0, seq_len):
+        """Run a superblock stack with caches (prefill / decode)."""
+        cfg = self.cfg
+        positions = pos0 + jnp.arange(seq_len)
+        ids = jnp.arange(sb.n_super, dtype=jnp.int32)
+
+        if cfg.reversible:
+            rdt = jnp.dtype(cfg.residual_dtype)
+            state0 = (h.astype(rdt), h.astype(rdt))
+        else:
+            state0 = h.astype(jnp.dtype(cfg.dtype))
+
+        def body(state, sp):
+            p, cache_i, i = sp
+            ctx = Ctx(positions, pos0, extra, i, True)
+            if cfg.reversible:
+                state, new_cache, _ = sb.fwd_pair(p, state, cache_i, ctx)
+            else:
+                state, new_cache, _ = sb.fwd_std(p, state, cache_i, ctx)
+            return state, new_cache
+
+        state, new_caches = lax.scan(body, state0, (stacked, caches, ids))
+        if cfg.reversible:
+            x1, x2 = state
+            out = ((x1 + x2) * 0.5).astype(jnp.dtype(cfg.dtype))
+        else:
+            out = state
+        return out, new_caches
+
+    def _run_decoder_nocache(self, params, h, extra, seq_len, grad_mode,
+                             layer_constraint=None):
+        h, aux = self._stack_nocache(
+            self.layout.main, params["blocks"], h, extra, seq_len, grad_mode,
+            layer_constraint=layer_constraint,
+        )
+        if self.layout.tail is not None:
+            # remainder blocks (zamba2): plain AD, constant count
+            positions = jnp.arange(seq_len)
+            ctx = Ctx(positions, jnp.zeros((), jnp.int32), extra, jnp.zeros((), jnp.int32), False)
+            if self.cfg.reversible:
+                rdt = jnp.dtype(self.cfg.residual_dtype)
+                state = (h.astype(rdt), h.astype(rdt))
+                state, _, aux_t = self.layout.tail.fwd_pair(
+                    params["tail_blocks"], state, {}, ctx
+                )
+                h = ((state[0] + state[1]) * 0.5).astype(jnp.dtype(self.cfg.dtype))
+            else:
+                h, _, aux_t = self.layout.tail.fwd_std(params["tail_blocks"], h, {}, ctx)
+            aux = aux + aux_t
+        return h, aux
+
+    # ------------------------------------------------------------------
+    # input assembly
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        h = jnp.take(params["embed"], tokens, axis=0)
+        return h.astype(jnp.dtype(self.cfg.dtype))
+
+    def _assemble(self, params, batch):
+        """Returns (h, extra, n_prefix).  n_prefix = positions before text."""
+        cfg = self.cfg
+        extra: dict[str, Any] = {}
+        if self.layout.has_shared_attn:
+            extra["shared_attn"] = params["shared_attn"]
+            extra["shared_ffn"] = params["shared_ffn"]
+        n_prefix = 0
+        h = self._embed(params, batch["tokens"])
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            vis = frontend_apply(params["frontend"], batch["patches"], cfg)
+            h = jnp.concatenate([vis, h], axis=1)
+            n_prefix = vis.shape[1]
+        if self.enc_layout is not None:
+            frames = batch["frames"]
+            if cfg.frontend is not None and cfg.frontend.kind == "audio":
+                frames = frontend_apply(params["frontend"], frames, cfg)
+            enc, _ = self._stack_nocache(
+                self.enc_layout.main,
+                params["encoder"],
+                frames,
+                None,
+                frames.shape[1],
+                self._grad_mode(None),
+            )
+            enc = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+            extra["enc"] = enc
+        return h, (extra or None), n_prefix
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ------------------------------------------------------------------
+    # training
+    # ------------------------------------------------------------------
+    def train_loss(self, params, batch, grad_mode: Optional[str] = None,
+                   layer_constraint=None):
+        cfg = self.cfg
+        h, extra, n_prefix = self._assemble(params, batch)
+        h, aux = self._run_decoder_nocache(
+            params, h, extra, h.shape[1], self._grad_mode(grad_mode),
+            layer_constraint=layer_constraint,
+        )
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        xent = chunked_softmax_xent(h, self._head(params), batch["labels"])
+        aux_total = jnp.sum(aux)
+        weight = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+        loss = xent + weight * aux_total
+        return loss, {"xent": xent, "aux": aux_total}
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def make_caches(self, batch: int, max_len: int):
+        caches = {"blocks": self.layout.main.make_caches(batch, max_len)}
+        if self.layout.tail is not None:
+            one = {
+                u.name: u.make_cache(batch, max_len) for u in self.layout.tail.units
+            }
+            caches["tail"] = jax.tree_util.tree_map(
+                lambda v: jnp.zeros((1,) + v.shape, v.dtype), one
+            )
+        return caches
+
+    def _decode_core(self, params, h, caches, pos0, extra):
+        seq_len = h.shape[1]
+        h, new_blocks = self._stack_cache(
+            self.layout.main, params["blocks"], caches["blocks"], h, extra, pos0, seq_len
+        )
+        new_caches = {"blocks": new_blocks}
+        if self.layout.tail is not None:
+            h, new_tail = self._stack_cache(
+                self.layout.tail,
+                jax.tree_util.tree_map(lambda v: v[None], params["tail_blocks"]),
+                caches["tail"], h, extra, pos0, seq_len,
+            )
+            new_caches["tail"] = new_tail
+        h = rmsnorm(h, params["final_norm"], self.cfg.norm_eps)
+        return h, new_caches
+
+    def prefill(self, params, batch, caches):
+        """Process the full prompt; returns (last-position logits, caches)."""
+        h, extra, _ = self._assemble(params, batch)
+        pos0 = jnp.zeros((), jnp.int32)
+        h, new_caches = self._decode_core(params, h, caches, pos0, extra)
+        logits = (h[:, -1] @ self._head(params).astype(h.dtype)).astype(jnp.float32)
+        return logits, new_caches
+
+    def decode_step(self, params, tokens, caches, pos0, extra_inputs: Optional[dict] = None):
+        """One decode step.  tokens: (B, 1); pos0: scalar write position."""
+        extra = {}
+        if self.layout.has_shared_attn:
+            extra["shared_attn"] = params["shared_attn"]
+            extra["shared_ffn"] = params["shared_ffn"]
+        if extra_inputs:
+            extra.update(extra_inputs)
+        h = self._embed(params, tokens)
+        h, new_caches = self._decode_core(params, h, caches, pos0, extra or None)
+        logits = (h[:, -1] @ self._head(params).astype(h.dtype)).astype(jnp.float32)
+        return logits, new_caches

@@ -1,0 +1,48 @@
+"""LM losses.  The vocabulary-chunked cross-entropy never materializes the
+full (B, S, V) logit tensor: the sequence is scanned in chunks whose logits
+are recomputed in the backward pass (``jax.checkpoint``), bounding loss
+memory to one chunk — essential at V=256k, S=32k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_softmax_xent(
+    h: jax.Array,  # (B, S, D) final hidden states
+    w_head: jax.Array,  # (D, V)
+    labels: jax.Array,  # (B, S) int32
+    chunk: int = 512,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Mean next-token NLL, streaming over sequence chunks."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        # pad to a chunk multiple with ignore labels
+        pad = chunk - s % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s = s + pad
+    nc = s // chunk
+    h_c = h.reshape(b, nc, chunk, d).swapaxes(0, 1)  # (nc, B, c, D)
+    l_c = labels.reshape(b, nc, chunk).swapaxes(0, 1)  # (nc, B, c)
+
+    def body(carry, inp):
+        hc, lc = inp
+        logits = (hc @ w_head.astype(hc.dtype)).astype(jnp.float32)  # (B,c,V)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (B,c)
+        valid = lc >= 0
+        lab = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = jnp.where(valid, lse - lab, 0.0)
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    body = jax.checkpoint(body)
+    (total, count), _ = lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (h_c, l_c))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,68 @@
+"""Build models from registered arch configs; produce dry-run input specs.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ``ShapeDtypeStruct``
+stand-ins for every model input of the given (architecture × shape) cell —
+shardable, zero-allocation (the multi-pod dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeSpec, get_arch
+from repro.models.frontends import VISION_EMBED_DIM
+from repro.models.lm import Model
+
+
+def build_model(arch: str | ModelConfig, **overrides) -> tuple[Model, ModelConfig]:
+    cfg = arch if isinstance(arch, ModelConfig) else get_arch(arch).config
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return Model(cfg), cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Inputs for the step function implied by ``shape.kind``.
+
+    train   -> full train batch (tokens/labels + modality features)
+    prefill -> same inputs minus labels (prompt ingestion)
+    decode  -> one new token per sequence (cache specs are built separately
+               from ``Model.make_caches`` via ``jax.eval_shape``)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if shape.kind == "decode":
+        return {"tokens": tok(b, 1)}
+
+    specs: dict = {}
+    s_text = s
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        n_patch = cfg.frontend.n_patches
+        s_text = s - n_patch
+        specs["patches"] = jax.ShapeDtypeStruct((b, n_patch, VISION_EMBED_DIM), act)
+    if cfg.is_enc_dec:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.n_frames, cfg.d_model), act
+        )
+    specs["tokens"] = tok(b, s_text)
+    if shape.kind == "train":
+        specs["labels"] = tok(b, s_text)
+    return specs
+
+
+def batch_like(specs: dict, rng: jax.Array, vocab_size: int) -> dict:
+    """Materialize a random concrete batch matching ``specs`` (smoke tests)."""
+    out = {}
+    for k, v in specs.items():
+        key = jax.random.fold_in(rng, hash(k) % (2**31))
+        if jnp.issubdtype(v.dtype, jnp.integer):
+            out[k] = jax.random.randint(key, v.shape, 0, vocab_size, v.dtype)
+        else:
+            out[k] = jax.random.normal(key, v.shape, v.dtype)
+    return out

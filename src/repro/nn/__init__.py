@@ -1,0 +1,13 @@
+from repro.nn.linear import Dense, dense_init, dense_apply
+from repro.nn.norm import rmsnorm, layernorm
+from repro.nn.nets import CouplingMLP, CouplingCNN
+
+__all__ = [
+    "Dense",
+    "dense_init",
+    "dense_apply",
+    "rmsnorm",
+    "layernorm",
+    "CouplingMLP",
+    "CouplingCNN",
+]

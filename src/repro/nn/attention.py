@@ -1,0 +1,173 @@
+"""Grouped-query attention with RoPE and KV-cache support.
+
+Projections are stored separately (wq/wk/wv/wo) so each can carry its own
+tensor-parallel sharding (heads on the ``model`` axis; KV projections
+replicate when n_kv_heads doesn't divide the axis — MQA).  The attention core
+is exchangeable: the XLA einsum path below (used for dry-run/roofline) or the
+Pallas flash kernel (``repro.kernels.attention``) selected via ``impl``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig
+from repro.nn.rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, d_model: int, cfg: AttentionConfig, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    std = d_model**-0.5
+    p = {
+        "wq": std * jax.random.normal(kq, (d_model, cfg.q_dim), dtype),
+        "wk": std * jax.random.normal(kk, (d_model, cfg.kv_dim), dtype),
+        "wv": std * jax.random.normal(kv, (d_model, cfg.kv_dim), dtype),
+        "wo": std * jax.random.normal(ko, (cfg.q_dim, d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: AttentionConfig, positions):
+    b, s, _ = x.shape
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _seq_shard_constraints(q, k, v):
+    """Sequence-parallel attention layout (§Perf/H6): queries sharded over
+    the model axis on the sequence dim, K/V replicated over it — avoids the
+    partial-contraction score all-reduce GSPMD picks when head counts don't
+    divide the model axis."""
+    from jax.sharding import PartitionSpec as P
+
+    q = jax.lax.with_sharding_constraint(q, P(None, "model", None, None))
+    k = jax.lax.with_sharding_constraint(k, P(None, None, None, None))
+    v = jax.lax.with_sharding_constraint(v, P(None, None, None, None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, cfg: AttentionConfig, q_positions, kv_positions):
+    """Grouped-query scaled-dot-product attention (einsum/XLA path).
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh).  Causality is decided by
+    comparing absolute positions, so the same code serves train, prefill and
+    decode-with-cache.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    qg = q.reshape(b, sq, hkv, groups, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores * (dh**-0.5)
+    mask = None
+    if cfg.causal:
+        mask = q_positions[:, None] >= kv_positions[None, :]  # (Sq, Skv)
+    if cfg.window:
+        w_ok = q_positions[:, None] - kv_positions[None, :] < cfg.window
+        mask = w_ok if mask is None else (mask & w_ok)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def attn_apply(
+    params,
+    x: jax.Array,
+    cfg: AttentionConfig,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    kv_override: Optional[tuple] = None,
+    impl: str = "xla",
+    seq_shard: bool = False,
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full attention op.
+
+    Without ``cache``: self-attention over ``x`` (train / prefill without
+    reuse).  With ``cache``: decode — write this step's K/V at ``cache_pos``
+    and attend over the whole cache.  ``kv_override=(k, v, kv_positions)``
+    implements cross-attention (whisper decoder).
+    """
+    b, s, _ = x.shape
+    if kv_override is not None:
+        q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k, v, kv_pos = kv_override
+        out = _sdpa(q, k, v, cfg, positions[0] if positions.ndim > 1 else positions, kv_pos)
+        return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype), cache
+
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cache is None:
+        pos1d = positions[0] if positions.ndim > 1 else positions
+        if seq_shard and s > 1:
+            q, k, v = _seq_shard_constraints(q, k, v)
+        if impl == "flash" and s > 1 and cfg.window == 0 and s % 128 == 0:
+            # Pallas flash kernel (kernels/attention): (B,S,H,D) <-> (B,H,S,D)
+            from repro.kernels.attention.ops import flash_sdpa
+
+            of = flash_sdpa(
+                q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                causal=cfg.causal,
+            )
+            out = of.swapaxes(1, 2)
+        else:
+            out = _sdpa(q, k, v, cfg, pos1d, pos1d)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        cache = {"k": k_cache, "v": v_cache}
+        kv_pos = jnp.arange(k_cache.shape[1])
+        pos1d = positions[0] if positions.ndim > 1 else positions
+        if seq_shard:
+            # flash-decode layout (§Perf/H5/H6): replicate queries over the
+            # model axis, shard the cache *sequence* over it; the softmax
+            # normalizers all-reduce small (B, Sq) tensors instead of GSPMD
+            # partial-contracting oblique head shards (32768^2 score ARs).
+            from jax.sharding import PartitionSpec as P
+
+            q = jax.lax.with_sharding_constraint(q, P(None, None, None, None))
+            k_att = jax.lax.with_sharding_constraint(k_cache, P(None, "model", None, None))
+            v_att = jax.lax.with_sharding_constraint(v_cache, P(None, "model", None, None))
+            out = _sdpa(q, k_att, v_att, cfg, pos1d, kv_pos)
+        else:
+            out = _sdpa(q, k_cache, v_cache, cfg, pos1d, kv_pos)
+    return out.reshape(b, s, -1) @ params["wo"].astype(x.dtype), cache
+
+
+def cross_kv(params, enc: jax.Array, cfg: AttentionConfig) -> tuple:
+    """Precompute cross-attention K/V from encoder output (whisper)."""
+    b, s, _ = enc.shape
+    k = (enc @ params["wk"].astype(enc.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc @ params["wv"].astype(enc.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    kv_pos = jnp.arange(s)
+    k = apply_rope(k, kv_pos, cfg.rope_theta)
+    return k, v, kv_pos
+
+
+def make_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }

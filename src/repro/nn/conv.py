@@ -1,0 +1,40 @@
+"""2-D convolution primitives (NHWC), used by coupling conditioners and the
+(stubbed) modality frontends."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_DN = lax.conv_dimension_numbers((1, 1, 1, 1), (1, 1, 1, 1), ("NHWC", "HWIO", "NHWC"))
+
+
+def conv2d_init(
+    rng: jax.Array,
+    c_in: int,
+    c_out: int,
+    k: int = 3,
+    *,
+    scale: str | float = "he",
+    dtype=jnp.float32,
+) -> dict:
+    if scale == "zeros":
+        w = jnp.zeros((k, k, c_in, c_out), dtype)
+    else:
+        fan_in = k * k * c_in
+        std = (2.0 / fan_in) ** 0.5 if scale == "he" else float(scale)
+        w = std * jax.random.normal(rng, (k, k, c_in, c_out), dtype)
+    return {"w": w, "b": jnp.zeros((c_out,), dtype)}
+
+
+def conv2d_apply(params: dict, x: jax.Array, stride: int = 1) -> jax.Array:
+    dn = lax.conv_dimension_numbers(x.shape, params["w"].shape, ("NHWC", "HWIO", "NHWC"))
+    y = lax.conv_general_dilated(
+        x,
+        params["w"].astype(x.dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=dn,
+    )
+    return y + params["b"].astype(x.dtype)

@@ -1,0 +1,57 @@
+"""Dense layer primitives (functional, explicit params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(
+    rng: jax.Array,
+    d_in: int,
+    d_out: int,
+    *,
+    bias: bool = True,
+    scale: str | float = "glorot",
+    dtype=jnp.float32,
+) -> dict:
+    """Initialize a dense layer.  ``scale="zeros"`` gives GLOW-style zero init
+    (identity-at-init couplings)."""
+    if scale == "zeros":
+        w = jnp.zeros((d_in, d_out), dtype)
+    else:
+        if scale == "glorot":
+            std = (2.0 / (d_in + d_out)) ** 0.5
+        elif scale == "he":
+            std = (2.0 / d_in) ** 0.5
+        elif scale == "lecun":
+            std = (1.0 / d_in) ** 0.5
+        else:
+            std = float(scale)
+        w = std * jax.random.normal(rng, (d_in, d_out), dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+class Dense:
+    """Tiny object wrapper used by flow conditioners."""
+
+    def __init__(self, d_out: int, *, bias: bool = True, scale: str | float = "glorot"):
+        self.d_out = d_out
+        self.bias = bias
+        self.scale = scale
+
+    def init(self, rng, d_in: int) -> dict:
+        return dense_init(rng, d_in, self.d_out, bias=self.bias, scale=self.scale)
+
+    def apply(self, params, x):
+        return dense_apply(params, x)

@@ -1,0 +1,52 @@
+"""Feed-forward blocks: SwiGLU (llama family), GELU MLP (whisper/GPT style)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    kg, ku, kd = jax.random.split(rng, 3)
+    std_in = d_model**-0.5
+    std_out = d_ff**-0.5
+    return {
+        "w_gate": std_in * jax.random.normal(kg, (d_model, d_ff), dtype),
+        "w_up": std_in * jax.random.normal(ku, (d_model, d_ff), dtype),
+        "w_down": std_out * jax.random.normal(kd, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu_apply(params, x: jax.Array) -> jax.Array:
+    g = x @ params["w_gate"].astype(x.dtype)
+    u = x @ params["w_up"].astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(x.dtype)
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w_in": d_model**-0.5 * jax.random.normal(k1, (d_model, d_ff), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": d_ff**-0.5 * jax.random.normal(k2, (d_ff, d_model), dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp_apply(params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["w_in"].astype(x.dtype) + params["b_in"].astype(x.dtype))
+    return h @ params["w_out"].astype(x.dtype) + params["b_out"].astype(x.dtype)
+
+
+def ffn_init(rng, d_model: int, d_ff: int, kind: str, dtype=jnp.float32) -> dict:
+    if kind == "swiglu":
+        return swiglu_init(rng, d_model, d_ff, dtype)
+    if kind == "gelu_mlp":
+        return gelu_mlp_init(rng, d_model, d_ff, dtype)
+    raise ValueError(f"unknown ffn kind {kind}")
+
+
+def ffn_apply(params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return swiglu_apply(params, x)
+    return gelu_mlp_apply(params, x)

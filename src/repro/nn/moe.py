@@ -1,0 +1,118 @@
+"""Mixture-of-experts FFN with deterministic top-k routing and GROUP-LOCAL
+capacity dispatch (Switch/T5X layout, §Perf/H8).
+
+Tokens are grouped by batch row and every group computes its own expert
+positions (cumsum over its own sequence only) and its own capacity slice of
+the dispatch buffer.  Groups are data-parallel shards, so dispatch/combine
+scatters never cross data shards — the only cross-device traffic is the
+(groups <-> experts) all-to-all around the expert matmuls, which is the
+textbook expert-parallel schedule.  (The previous revision used a global
+flat-token cumsum; GSPMD resolved its cross-shard scatters with full-width
+all-reduces — 731 GiB/step on granite-moe; see EXPERIMENTS.md §Perf/H8.)
+
+Reversible-stack notes (unchanged):
+* routing is deterministic (`lax.top_k` on f32), so recompute-by-inversion
+  re-routes identically — MoE is a valid coupling conditioner;
+* the load-balance aux loss rides the scan engine's (B,) aux channel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MoEConfig
+from repro.nn.mlp import ffn_apply, ffn_init
+
+
+def moe_init(rng, d_model: int, cfg: MoEConfig, ffn_kind: str, dtype=jnp.float32) -> dict:
+    kr, ke, ks = jax.random.split(rng, 3)
+    expert_keys = jax.random.split(ke, cfg.n_experts)
+    experts = jax.vmap(lambda k: ffn_init(k, d_model, cfg.d_ff_expert, ffn_kind, dtype))(
+        expert_keys
+    )
+    p = {
+        "router": d_model**-0.5 * jax.random.normal(kr, (d_model, cfg.n_experts), dtype),
+        "experts": experts,
+    }
+    if cfg.shared_expert:
+        p["shared"] = ffn_init(ks, d_model, cfg.d_ff_expert, ffn_kind, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(cfg.capacity_factor * tokens_per_group * cfg.top_k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _wsc(x, *spec):
+    """with_sharding_constraint, ignored when no mesh context provides the
+    named axes (single-device tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, TypeError, NameError, KeyError, RuntimeError):
+        return x
+
+
+def moe_apply(
+    params, x: jax.Array, cfg: MoEConfig, ffn_kind: str
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y: (B, S, D), aux: (B,) load-balance loss/B)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+    daxes = ("pod", "data")
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # ---- load-balance aux loss (per group -> per-sample channel) ----------
+    me = jnp.mean(probs, axis=1)  # (B,E)
+    top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(top1, axis=1)  # (B,E)
+    aux_per_sample = e * jnp.sum(me * ce, axis=-1) / b  # (B,)
+
+    # ---- group-local dispatch positions (cumsum within each batch row) -----
+    flat_e = expert_idx.reshape(b, s * k)  # (B, S*K) token-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (B, S*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]  # (B, S*K)
+    keep = pos_in_e < cap
+    safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+    token_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), k)[None], (b, s * k)
+    )  # (B, S*K)
+
+    # ---- scatter into the per-group buffer (vmapped: shard-local) ----------
+    def dispatch_row(xr, er, pr, kr):
+        contrib = jnp.where(kr[:, None], xr[jnp.repeat(jnp.arange(s), k)], 0)
+        return jnp.zeros((e, cap, d), x.dtype).at[er, pr].add(contrib, mode="drop")
+
+    buf = jax.vmap(dispatch_row)(x, flat_e, safe_pos, keep)  # (B, E, cap, D)
+    buf = _wsc(buf, daxes, None, None, None)
+
+    # ---- expert compute (expert-parallel; groups<->experts all-to-all) -----
+    buf_e = buf.swapaxes(0, 1)  # (E, B, cap, D)
+    buf_e = _wsc(buf_e, "model", None, None, None)
+    out_e = jax.vmap(
+        lambda p, xe: ffn_apply(p, xe.reshape(b * cap, d), ffn_kind).reshape(b, cap, d)
+    )(params["experts"], buf_e)
+    out_e = _wsc(out_e, "model", None, None, None)
+    out_buf = out_e.swapaxes(0, 1)  # (B, E, cap, D)
+    out_buf = _wsc(out_buf, daxes, None, None, None)
+
+    # ---- combine (gather + weighted scatter-add back, per group) -----------
+    w = (gate_vals.reshape(b, s * k) * keep).astype(x.dtype)
+
+    def combine_row(ob, er, pr, wr, tr):
+        gathered = ob[er, pr]  # (S*K, D)
+        return jnp.zeros((s, d), x.dtype).at[tr].add(gathered * wr[:, None])
+
+    y = jax.vmap(combine_row)(out_buf, flat_e, safe_pos, w, token_of)  # (B,S,D)
+
+    if "shared" in params:
+        y = y + ffn_apply(params["shared"], x, ffn_kind)
+    return y, aux_per_sample

@@ -1,0 +1,70 @@
+"""Conditioner networks for coupling layers.
+
+These are the *arbitrary, non-invertible* neural networks the paper's coupling
+layers exploit (RealNVP [2]): they are differentiated by ordinary AD inside
+the memory-frugal engine's local per-layer VJP — the analogue of the package's
+ChainRules/Zygote interop.  The final layer is zero-initialized (GLOW
+convention) so every coupling starts as the identity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.conv import conv2d_apply, conv2d_init
+from repro.nn.linear import dense_apply, dense_init
+
+
+class CouplingMLP:
+    """MLP conditioner for dense (B, D) flows: d_in (+ d_cond) -> d_out."""
+
+    def __init__(self, d_out: int, hidden: int = 128, depth: int = 2):
+        self.d_out = d_out
+        self.hidden = hidden
+        self.depth = depth
+
+    def init(self, rng, d_in: int, d_cond: int = 0) -> dict:
+        ks = jax.random.split(rng, self.depth + 1)
+        dims = [d_in + d_cond] + [self.hidden] * self.depth
+        layers = [
+            dense_init(ks[i], dims[i], dims[i + 1], scale="he") for i in range(self.depth)
+        ]
+        layers.append(dense_init(ks[-1], dims[-1], self.d_out, scale="zeros"))
+        return {"layers": layers}
+
+    def apply(self, params, x, cond=None):
+        h = x if cond is None else jnp.concatenate([x, cond.astype(x.dtype)], axis=-1)
+        for i, p in enumerate(params["layers"]):
+            h = dense_apply(p, h)
+            if i < len(params["layers"]) - 1:
+                h = jax.nn.gelu(h)
+        return h
+
+
+class CouplingCNN:
+    """3x3-1x1-3x3 convnet conditioner for image (B, H, W, C) flows (GLOW)."""
+
+    def __init__(self, c_out: int, hidden: int = 64):
+        self.c_out = c_out
+        self.hidden = hidden
+
+    def init(self, rng, c_in: int, c_cond: int = 0) -> dict:
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "conv1": conv2d_init(k1, c_in + c_cond, self.hidden, 3, scale="he"),
+            "conv2": conv2d_init(k2, self.hidden, self.hidden, 1, scale="he"),
+            "conv3": conv2d_init(k3, self.hidden, self.c_out, 3, scale="zeros"),
+        }
+
+    def apply(self, params, x, cond=None):
+        h = x
+        if cond is not None:
+            if cond.ndim == 2:  # broadcast a vector condition over space
+                cond = jnp.broadcast_to(
+                    cond[:, None, None, :], x.shape[:3] + (cond.shape[-1],)
+                )
+            h = jnp.concatenate([h, cond.astype(x.dtype)], axis=-1)
+        h = jax.nn.relu(conv2d_apply(params["conv1"], h))
+        h = jax.nn.relu(conv2d_apply(params["conv2"], h))
+        return conv2d_apply(params["conv3"], h)

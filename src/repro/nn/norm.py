@@ -1,0 +1,31 @@
+"""Normalization primitives."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the trailing dimension; computed in f32 for stability."""
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def layernorm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)}

@@ -1,0 +1,29 @@
+"""Rotary position embeddings (RoPE)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim//2,), f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` (..., S, H, Dh) by position-dependent angles.
+
+    ``positions`` has shape (..., S) (broadcastable against x's batch/seq).
+    Uses the split-halves convention (dims [0:D/2], [D/2:D] form pairs).
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)

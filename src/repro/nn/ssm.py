@@ -1,0 +1,369 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented functionally with an explicit recurrent ``state`` so the
+same code serves training (state=None, chunked/parallel over sequence),
+prefill (returns final state) and decode (single-token step).  Pure-jnp
+reference scans live here; the Pallas TPU kernels in ``repro.kernels.{ssd,
+rwkv}`` implement the same math with VMEM tiling and are tested against these.
+
+As coupling conditioners inside the reversible stack these mixers need *no*
+inverse — additive coupling only re-evaluates them (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import SSMConfig
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def mamba2_init(rng, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    n = cfg.d_state
+    ks = jax.random.split(rng, 8)
+    std = d_model**-0.5
+    return {
+        "wz": std * jax.random.normal(ks[0], (d_model, d_in), dtype),
+        "wx": std * jax.random.normal(ks[1], (d_model, d_in), dtype),
+        "wb": std * jax.random.normal(ks[2], (d_model, n), dtype),
+        "wc": std * jax.random.normal(ks[3], (d_model, n), dtype),
+        "wdt": std * jax.random.normal(ks[4], (d_model, h), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, dtype))),  # softplus^-1
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype)),
+        "d_skip": jnp.ones((h,), dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[5], (cfg.d_conv, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "wo": (d_in**-0.5) * jax.random.normal(ks[6], (d_in, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv along time.  x: (B, S, C); w: (K, C).
+
+    With ``state`` ((B, K-1, C), decode/prefill carry) prepends it instead of
+    zero-padding; returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else jnp.zeros_like(pad)
+    return y + b.astype(x.dtype), new_state
+
+
+def _ssd_chunk_scan(xh, da, dt, b_in, c_in, state0, chunk: int):
+    """Chunked SSD scan (Mamba2 sec. 6 'minimal' algorithm).
+
+    xh: (B,S,H,P) inputs; da: (B,S,H) log-decays (dt*A, negative);
+    dt: (B,S,H); b_in/c_in: (B,S,N) (single group, broadcast over heads);
+    state0: (B,H,P,N).  Returns (y: (B,S,H,P), state: (B,H,P,N)).
+    """
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+
+    def resh(v, trailing):
+        return v.reshape((bsz, nc, chunk) + trailing)
+
+    xh_c = resh(xh, (h, p))
+    da_c = resh(da, (h,))
+    dt_c = resh(dt, (h,))
+    b_c = resh(b_in, (n,))
+    c_c = resh(c_in, (n,))
+
+    def body(state, inp):
+        xck, dack, dtck, bck, cck = inp  # leading dim B (scan over chunks)
+        cum = jnp.cumsum(dack, axis=1)  # (B,c,H)
+        # contribution of the carried state
+        y_state = jnp.einsum("bcn,bhpn,bch->bchp", cck, state, jnp.exp(cum))
+        # intra-chunk (masked) quadratic part
+        rel = cum[:, :, None, :] - cum[:, None, :, :]  # (B,c,c,H) cum_t - cum_s
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cck, bck)  # (B,c,c)
+        xdt = xck * dtck[..., None]  # (B,c,H,P)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", cb, decay, xdt)
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # exp(cum_end - cum_s), (B,c,H)
+        new_state = state * jnp.exp(cum[:, -1])[..., None, None]  # (B,H,P,N)
+        new_state = new_state + jnp.einsum("bsh,bsn,bshp->bhpn", tail, bck, xdt)
+        return new_state, y_state + y_intra
+
+    # scan over the chunk axis: move nc to the front
+    inp = (
+        xh_c.swapaxes(0, 1),
+        da_c.swapaxes(0, 1),
+        dt_c.swapaxes(0, 1),
+        b_c.swapaxes(0, 1),
+        c_c.swapaxes(0, 1),
+    )
+    state, y = lax.scan(body, state0, inp)
+    y = y.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, state
+
+
+def mamba2_apply(
+    params,
+    x: jax.Array,
+    cfg: SSMConfig,
+    state: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, D).  ``state``: {"conv": (B,K-1,d_in), "ssd": (B,H,P,N)} or
+    None (training: zero initial state, no state returned)."""
+    bsz, s, d_model = x.shape
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    p = cfg.head_dim
+    n = cfg.d_state
+
+    z = x @ params["wz"].astype(x.dtype)
+    xs = x @ params["wx"].astype(x.dtype)
+    b_in = x @ params["wb"].astype(x.dtype)
+    c_in = x @ params["wc"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        (x @ params["wdt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H) f32
+
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,) negative
+    da = dt * a  # (B,S,H)
+    xh = xs.reshape(bsz, s, h, p)
+
+    ssd_state0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32) if state is None else state["ssd"]
+    )
+    if s == 1:  # decode fast path: plain recurrence
+        decay = jnp.exp(da[:, 0])  # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", b_in[:, 0].astype(jnp.float32),
+                         (xh[:, 0] * dt[:, 0][..., None]).astype(jnp.float32))
+        new_ssd = ssd_state0 * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), new_ssd)
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+    else:
+        chunk = min(cfg.chunk, s)
+        y, new_ssd = _ssd_chunk_scan(
+            xh.astype(jnp.float32),
+            da,
+            dt,
+            b_in.astype(jnp.float32),
+            c_in.astype(jnp.float32),
+            ssd_state0,
+            chunk,
+        )
+        y = y.astype(x.dtype)
+
+    y = y + params["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_in)
+    # gated RMSNorm (Mamba2) then output projection
+    yz = y * jax.nn.silu(z)
+    yf = yz.astype(jnp.float32)
+    yf = yf * lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-5)
+    y = (yf.astype(x.dtype)) * params["norm"].astype(x.dtype)
+    out = y @ params["wo"].astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssd": new_ssd}
+    return out, new_state
+
+
+def mamba2_state(cfg: SSMConfig, d_model: int, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+        "ssd": jnp.zeros((batch, h, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+
+def rwkv6_init(rng, d_model: int, cfg: SSMConfig, d_ff: int, dtype=jnp.float32) -> dict:
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    ks = jax.random.split(rng, 12)
+    std = d_model**-0.5
+    lora = max(32, d_model // 64)
+    p = {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d_model), dtype),  # r,k,v,g,w static lerp
+        "wr": std * jax.random.normal(ks[0], (d_model, d_in), dtype),
+        "wk": std * jax.random.normal(ks[1], (d_model, d_in), dtype),
+        "wv": std * jax.random.normal(ks[2], (d_model, d_in), dtype),
+        "wg": std * jax.random.normal(ks[3], (d_model, d_in), dtype),
+        # data-dependent decay (LoRA): w = exp(-exp(w0 + tanh(x A) B))
+        "w0": -6.0 * jnp.ones((d_in,), dtype),
+        "wa": std * jax.random.normal(ks[4], (d_model, lora), dtype),
+        "wb": (lora**-0.5) * jax.random.normal(ks[5], (lora, d_in), dtype),
+        "u": 0.1 * jax.random.normal(ks[6], (d_in,), dtype),  # bonus
+        "ln": jnp.ones((d_in,), dtype),  # per-head group norm gain
+        "wo": (d_in**-0.5) * jax.random.normal(ks[7], (d_in, d_model), dtype),
+        # channel-mix
+        "cm_mu": 0.5 * jnp.ones((2, d_model), dtype),  # k, r
+        "cm_wk": std * jax.random.normal(ks[8], (d_model, d_ff), dtype),
+        "cm_wv": (d_ff**-0.5) * jax.random.normal(ks[9], (d_ff, d_model), dtype),
+        "cm_wr": std * jax.random.normal(ks[10], (d_model, d_model), dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """xx[t] = x[t-1]; first position gets ``last`` (carry) or zeros."""
+    if last is None:
+        first = jnp.zeros_like(x[:, :1])
+    else:
+        first = last[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1), x[:, -1]
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """RWKV6 recurrence, per-token scan (baseline).
+
+    r,k,v,w: (B,S,H,K); u: (H,K); state0: (B,H,K,K).
+
+    y_t = r_t · (S_{t-1} + diag(u·k_t) v_t);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    (all f32).  Returns y (B,S,H,K) and final state.
+
+    Roofline note: the (B,H,K,K) state round-trips HBM every token — this is
+    the memory-bound hot spot the chunked variant and the Pallas kernel fix.
+    """
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,K)
+        y = jnp.einsum("bhk,bhkj->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    seq = tuple(v_.swapaxes(0, 1) for v_ in (r, k, v, w))
+    state, y = lax.scan(body, state0, seq)
+    return y.swapaxes(0, 1), state
+
+
+def _wkv_scan_chunked(r, k, v, w, u, state0, chunk: int = 16):
+    """Chunked wkv (EXPERIMENTS.md §Perf/H3): scan over chunks, inner steps
+    unrolled so the state round-trips HBM once per *chunk* instead of once
+    per token (the XLA analogue of the VMEM-resident Pallas kernel; on TPU
+    the kernel in ``repro.kernels.rwkv`` keeps it fully resident)."""
+    bsz, s, h, kd = r.shape
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    nc = (s + pad) // chunk
+
+    def resh(x):  # (B, S, H, K) -> (nc, c, B, H, K)
+        return x.reshape(bsz, nc, chunk, h, kd).transpose(1, 2, 0, 3, 4)
+
+    rs, ks, vs, ws = resh(r), resh(k), resh(v), resh(w)
+
+    def body(state, inp):
+        rc, kc, vc, wc = inp  # (c, B, H, K)
+        ys = []
+        for t in range(chunk):  # unrolled: fusible, no per-token state I/O
+            kv = kc[t][..., :, None] * vc[t][..., None, :]
+            y = jnp.einsum("bhk,bhkj->bhj", rc[t], state + u[None, :, :, None] * kv)
+            state = wc[t][..., :, None] * state + kv
+            ys.append(y)
+        return state, jnp.stack(ys)
+
+    state, y = lax.scan(body, state0, (rs, ks, vs, ws))
+    y = y.transpose(2, 0, 1, 3, 4).reshape(bsz, nc * chunk, h, kd)
+    return y[:, :s], state
+
+
+def rwkv6_time_mix(
+    params, x: jax.Array, cfg: SSMConfig, state: Optional[dict] = None
+) -> tuple[jax.Array, Optional[dict]]:
+    """RWKV6 attention-free token mixer.  x: (B,S,D)."""
+    bsz, s, d_model = x.shape
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    k_dim = cfg.head_dim
+
+    last = None if state is None else state["shift"]
+    xx, new_shift = _token_shift(x, last)
+    dx = xx - x
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + dx * mu[i] for i in range(5))
+
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(bsz, s, h, k_dim)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(bsz, s, h, k_dim)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(bsz, s, h, k_dim)
+    g = jax.nn.silu(xg @ params["wg"].astype(x.dtype))
+
+    # data-dependent decay in (0, 1)
+    lora = jnp.tanh(xw @ params["wa"].astype(x.dtype)) @ params["wb"].astype(x.dtype)
+    w = jnp.exp(
+        -jnp.exp(params["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    ).reshape(bsz, s, h, k_dim)
+
+    u = params["u"].astype(jnp.float32).reshape(h, k_dim)
+    state0 = (
+        jnp.zeros((bsz, h, k_dim, k_dim), jnp.float32) if state is None else state["wkv"]
+    )
+    rkv = (r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    if cfg.wkv_chunk and s > 1:
+        y, new_wkv = _wkv_scan_chunked(*rkv, w, u, state0, chunk=cfg.wkv_chunk)
+    else:
+        y, new_wkv = _wkv_scan(*rkv, w, u, state0)  # (B,S,H,K) f32
+
+    # per-head group norm, gate, project
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * lax.rsqrt(var + 1e-5)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype) * params["ln"].astype(x.dtype)
+    out = (y * g) @ params["wo"].astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = {"shift": new_shift.astype(x.dtype), "wkv": new_wkv}
+    return out, new_state
+
+
+def rwkv6_channel_mix(
+    params, x: jax.Array, state: Optional[dict] = None
+) -> tuple[jax.Array, Optional[dict]]:
+    last = None if state is None else state["shift"]
+    xx, new_shift = _token_shift(x, last)
+    dx = xx - x
+    mu = params["cm_mu"].astype(x.dtype)
+    xk = x + dx * mu[0]
+    xr = x + dx * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params["cm_wk"].astype(x.dtype)))
+    kv = k @ params["cm_wv"].astype(x.dtype)
+    out = jax.nn.sigmoid(xr @ params["cm_wr"].astype(x.dtype)) * kv
+    new_state = None if state is None else {"shift": new_shift.astype(x.dtype)}
+    return out, new_state
+
+
+def rwkv6_state(cfg: SSMConfig, d_model: int, batch: int, dtype=jnp.bfloat16) -> dict:
+    h = cfg.n_heads(d_model)
+    return {
+        "time": {
+            "shift": jnp.zeros((batch, d_model), dtype),
+            "wkv": jnp.zeros((batch, h, cfg.head_dim, cfg.head_dim), jnp.float32),
+        },
+        "chan": {"shift": jnp.zeros((batch, d_model), dtype)},
+    }

@@ -1,0 +1,16 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_warmup
+from repro.optim.compression import (
+    compress_grads,
+    compression_init,
+    decompress_and_correct,
+)
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "cosine_warmup",
+    "compress_grads",
+    "compression_init",
+    "decompress_and_correct",
+]

@@ -1,0 +1,62 @@
+"""Gradient accumulation (microbatching).
+
+At scale the per-device batch that fits HBM is smaller than the global
+batch the optimizer wants; the step is split into ``n_micro`` sequential
+microbatches whose gradients are averaged in a `lax.scan` (constant memory
+in the number of microbatches — the activation memory of ONE microbatch,
+which composes with the reversible stack's O(1)-in-depth activations).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def accumulate_grads(
+    loss_fn: Callable,  # (params, microbatch) -> (loss, aux)
+    params,
+    batch,
+    n_micro: int,
+):
+    """Split ``batch`` leaves on axis 0 into ``n_micro`` slices; return
+    (mean loss, aux of last microbatch, averaged grads)."""
+    if n_micro <= 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)(
+            params, batch
+        )
+        return loss, aux, grads
+
+    micro = jax.tree_util.tree_map(
+        lambda v: v.reshape((n_micro, v.shape[0] // n_micro) + v.shape[1:]), batch
+    )
+
+    def body(carry, mb):
+        acc, loss_sum = carry
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)(
+            params, mb
+        )
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(a.dtype)
+            if jnp.issubdtype(a.dtype, jnp.inexact)
+            else a,
+            acc,
+            grads,
+        )
+        return (acc, loss_sum + loss), aux
+
+    zeros = jax.tree_util.tree_map(
+        lambda v: jnp.zeros(v.shape, jnp.float32)
+        if jnp.issubdtype(v.dtype, jnp.inexact)
+        else jnp.zeros(v.shape, v.dtype),
+        params,
+    )
+    (acc, loss_sum), auxs = lax.scan(body, (zeros, jnp.zeros(())), micro)
+    grads = jax.tree_util.tree_map(
+        lambda a: a / n_micro if jnp.issubdtype(a.dtype, jnp.inexact) else a, acc
+    )
+    aux = jax.tree_util.tree_map(lambda v: v[-1], auxs)
+    return loss_sum / n_micro, aux, grads

@@ -1,0 +1,72 @@
+"""AdamW, implemented directly in JAX (no optimizer library dependency).
+
+* Integer leaves (permutation/sign buffers of invertible layers) are
+  structurally excluded: they get no moments and no updates.
+* Global-norm clipping is fused into the update.
+* Moments are stored in f32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def _trainable(v) -> bool:
+    return jnp.issubdtype(jnp.asarray(v).dtype, jnp.inexact)
+
+
+def adamw_init(params) -> dict:
+    def zeros(v):
+        return jnp.zeros(v.shape, jnp.float32) if _trainable(v) else None
+
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt_state, cfg: TrainConfig, lr: jax.Array):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+
+    # global-norm clip (f32)
+    leaves = [
+        g for g in jax.tree_util.tree_leaves(grads) if jnp.issubdtype(g.dtype, jnp.inexact)
+    ]
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.where(
+        (cfg.grad_clip > 0) & (gnorm > cfg.grad_clip), cfg.grad_clip / (gnorm + 1e-9), 1.0
+    )
+
+    b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
+    c1 = 1.0 - b1**step.astype(jnp.float32)
+    c2 = 1.0 - b2**step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        if mu is None or not _trainable(p):
+            return p, mu, nu
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / c1
+        vhat = nu / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return (
+        new_p,
+        {"mu": new_mu, "nu": new_nu, "step": step},
+        {"grad_norm": gnorm, "clip_scale": scale},
+    )

@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + jitted decode loop.
+
+Serves a fixed decode batch (the assignment's ``decode_*`` shapes): one
+prefill over the prompt populates the caches, then greedy/temperature
+decode steps append tokens.  The decode step is a single jitted function of
+(params, caches, tokens, pos) — the function the dry-run lowers for the
+decode cells.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class ServeEngine:
+    def __init__(self, model, params, max_len: int, temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos, extra: model.decode_step(p, tok, caches, pos, extra)
+        )
+        self._prefill = jax.jit(lambda p, batch, caches: model.prefill(p, batch, caches))
+
+    def _sample(self, logits, rng):
+        if self.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / self.temperature).astype(jnp.int32)
+
+    def generate(
+        self,
+        batch: dict,
+        max_new: int,
+        rng: Optional[jax.Array] = None,
+        eos_id: Optional[int] = None,
+    ):
+        """batch: prefill inputs (tokens + modality features).  Returns
+        (generated tokens (B, max_new), per-step logits list)."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        bsz, prompt_len = batch["tokens"].shape
+        caches = self.model.make_caches(bsz, self.max_len)
+        logits, caches = self._prefill(self.params, batch, caches)
+
+        extra = None
+        cfg = self.model.cfg
+        if cfg.is_enc_dec:
+            # cache the encoder pass once; reuse for every decode step
+            from repro.models.frontends import frontend_apply
+            from repro.nn.norm import rmsnorm
+
+            h = frontend_apply(self.params["frontend"], batch["frames"], cfg)
+            enc, _ = self.model._stack_nocache(
+                self.model.enc_layout.main, self.params["encoder"], h, None,
+                h.shape[1], "autodiff",
+            )
+            extra = {"enc": rmsnorm(enc, self.params["enc_norm"], cfg.norm_eps)}
+
+        n_prefix = (
+            cfg.frontend.n_patches
+            if (cfg.frontend is not None and cfg.frontend.kind == "vision")
+            else 0
+        )
+        pos = prompt_len + n_prefix
+        out_tokens = []
+        done = jnp.zeros((bsz,), bool)
+        tok = None
+        for i in range(max_new):
+            rng, krng = jax.random.split(rng)
+            tok = self._sample(logits, krng)
+            if eos_id is not None:
+                done = done | (tok == eos_id)
+                tok = jnp.where(done, eos_id, tok)
+            out_tokens.append(tok)
+            if bool(jnp.all(done)):
+                break
+            logits, caches = self._decode(
+                self.params, tok[:, None], caches, jnp.asarray(pos + i, jnp.int32), extra
+            )
+        return jnp.stack(out_tokens, axis=1), logits

@@ -1,0 +1,14 @@
+from repro.train.checkpoint import latest_step, restore, save
+from repro.train.loop import TrainResult, train_flow, train_lm
+from repro.train.fault import FailureInjector, StragglerWatchdog
+
+__all__ = [
+    "FailureInjector",
+    "StragglerWatchdog",
+    "TrainResult",
+    "latest_step",
+    "restore",
+    "save",
+    "train_flow",
+    "train_lm",
+]

@@ -1,0 +1,22 @@
+from repro.utils.tree import (
+    param_count,
+    param_bytes,
+    tree_cast,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    global_norm,
+)
+from repro.utils.hlo import collective_bytes, parse_hlo_collectives
+
+__all__ = [
+    "param_count",
+    "param_bytes",
+    "tree_cast",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "global_norm",
+    "collective_bytes",
+    "parse_hlo_collectives",
+]

@@ -1,0 +1,361 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` (scan) body ONCE — for a
+scan-over-layers model that under-counts FLOPs/bytes/collectives by the layer
+count.  This module re-derives roofline numerators by walking the HLO
+computation graph with trip-count scaling (XLA stamps
+``known_trip_count`` on while ops):
+
+  cost(comp) = Σ direct op costs
+             + Σ_{while}  trips * cost(body)
+             + Σ_{fusion} flops(callee)            (bytes stay at the boundary)
+             + Σ_{call/conditional} cost(callee)
+
+* FLOPs: ``dot`` = 2 * |result| * contracted-dim size (operand shapes resolved
+  from per-computation name->shape maps); elementwise/transcendental ops = 1
+  flop/element; ``reduce``/``reduce-window`` = |operand|.
+* Bytes: per *top-level* op, operands + result (fusion interiors excluded —
+  they live in VMEM/registers); the HBM-traffic reading of bytes-accessed.
+* Collectives: operand bytes per device by kind (all-gather results divided
+  by group size, reduce-scatter multiplied).
+
+All numbers are per device per executable run (HLO is the per-partition
+program under SPMD).  Collectives appear only in the *compiled* module —
+``lowered.as_text()`` is pre-partitioning StableHLO.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "and", "or",
+    "xor", "not", "negate", "abs", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "sign", "compare", "select", "clamp", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "power", "cosine", "sine", "tan",
+    "erf", "atan2", "expm1", "log1p",
+}
+_NO_BYTES = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*(\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\])")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"\bcalls=%?([\w.\-]+)")
+_TO_APPLY_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TO_APPLY_WHILE_RE2 = re.compile(r"body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    """(total elements, total bytes) over every shape literal in ``text``."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(1, len([s for s in m.group(1).split(",") if s.strip()]))
+    return 1
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_in: int
+    line: str = field(repr=False, default="")
+
+
+@dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = field(default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS})
+    coll_count: int = 0
+    coll_ops: list = field(default_factory=list)
+    fusion_calls: list = field(default_factory=list)  # flops traverse only
+    control_calls: list = field(default_factory=list)  # flops + bytes traverse
+    whiles: list = field(default_factory=list)  # (cond, body, trip|None)
+    max_const: int = 1
+
+
+def _parse(hlo_text: str) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        hm = _COMP_RE.match(line)
+        if hm:
+            cur = _Comp(hm.group(1))
+            comps[cur.name] = cur
+            shapes = {}
+            for pname, pshape in _PARAM_RE.findall(hm.group(2)):
+                shapes[pname] = pshape
+            if line.startswith("ENTRY") and entry is None:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om is None:
+            for c in _CONST_RE.finditer(line):
+                cur.max_const = max(cur.max_const, int(c.group(1)))
+            continue
+        name, result_shape, opcode, rest = om.groups()
+        shapes[name] = result_shape
+        elems, rbytes = _shape_elems_bytes(result_shape)
+
+        # -- trip-count sources -------------------------------------------
+        for c in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(c.group(1)))
+
+        # -- control flow ----------------------------------------------------
+        if opcode == "while":
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else None
+            wm = _TO_APPLY_WHILE_RE.search(line)
+            if wm:
+                cur.whiles.append((wm.group(1), wm.group(2), trip))
+            else:
+                wm = _TO_APPLY_WHILE_RE2.search(line)
+                if wm:
+                    cur.whiles.append((wm.group(2), wm.group(1), trip))
+            continue
+        if opcode == "fusion":
+            cm = _CALLS_RE.search(line)
+            if cm:
+                cur.fusion_calls.append(cm.group(1))
+        elif opcode in ("call", "async-start"):
+            cm = _CALLS_RE.search(line) or re.search(r"to_apply=%?([\w.\-]+)", line)
+            if cm:
+                cur.control_calls.append(cm.group(1))
+        elif opcode == "conditional":
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                cur.control_calls.extend(
+                    n.strip().lstrip("%") for n in bm.group(1).split(",")
+                )
+
+        # -- operand shapes (from name map) ----------------------------------
+        operand_part = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
+        operand_names = _OPERAND_RE.findall(operand_part)
+        operand_bytes = 0
+        for on in operand_names:
+            if on in shapes:
+                operand_bytes += _shape_elems_bytes(shapes[on])[1]
+
+        # -- collectives ---------------------------------------------------------
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in COLLECTIVE_KINDS and not opcode.endswith("-done"):
+            nbytes = rbytes
+            g = _group_size(line)
+            if base == "all-gather":
+                nbytes //= g
+            elif base == "reduce-scatter":
+                nbytes *= g
+            cur.collectives[base] += nbytes
+            cur.coll_count += 1
+            cur.coll_ops.append(CollectiveOp(base, nbytes, line.strip()))
+            cur.bytes += rbytes + operand_bytes
+            continue
+
+        # -- flops -------------------------------------------------------------
+        if opcode == "dot":
+            contract = 1
+            lm = _LHS_CONTRACT_RE.search(line)
+            if lm and operand_names and operand_names[0] in shapes:
+                lhs_dims = _shape_dims(shapes[operand_names[0]])
+                for idx in (int(i) for i in lm.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+            cur.flops += 2.0 * elems * contract
+        elif opcode in ("reduce", "reduce-window"):
+            op_elems = 0
+            for on in operand_names:
+                if on in shapes:
+                    op_elems = max(op_elems, _shape_elems_bytes(shapes[on])[0])
+            cur.flops += float(op_elems or elems)
+        elif opcode == "convolution":
+            # rough: 2 * |result| * (|lhs| / spatial positions) — rarely hit
+            cur.flops += 2.0 * elems
+        elif opcode in _ELEMENTWISE or opcode in _TRANSCENDENTAL:
+            cur.flops += float(elems)
+
+        # -- bytes (top-level ops only; fusion interiors come via callee skip) --
+        if opcode not in _NO_BYTES:
+            cur.bytes += rbytes + operand_bytes
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = field(default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS})
+    coll_count: int = 0
+
+    @property
+    def coll_total(self) -> int:
+        return sum(self.collectives[k] for k in COLLECTIVE_KINDS)
+
+
+def hlo_cost(hlo_text: str) -> HloCost:
+    """Trip-count-scaled per-device cost of one executable run."""
+    comps, entry = _parse(hlo_text)
+    memo: dict[str, HloCost] = {}
+
+    def total(name: str, depth=0) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return HloCost()
+        memo[name] = HloCost()  # cycle guard
+        c = comps[name]
+        acc = HloCost(
+            flops=c.flops,
+            bytes=c.bytes,
+            collectives=dict(c.collectives),
+            coll_count=c.coll_count,
+        )
+        for callee in c.fusion_calls:  # flops only: interior stays in VMEM
+            sub = total(callee, depth + 1)
+            acc.flops += sub.flops
+        for callee in c.control_calls:
+            sub = total(callee, depth + 1)
+            acc.flops += sub.flops
+            acc.bytes += sub.bytes
+            acc.coll_count += sub.coll_count
+            for k in COLLECTIVE_KINDS:
+                acc.collectives[k] += sub.collectives[k]
+        for cond, body, trip in c.whiles:
+            trips = trip if trip is not None else (
+                comps[cond].max_const if cond in comps else 1
+            )
+            sub = total(body, depth + 1)
+            acc.flops += trips * sub.flops
+            acc.bytes += trips * sub.bytes
+            acc.coll_count += trips * sub.coll_count
+            for k in COLLECTIVE_KINDS:
+                acc.collectives[k] += trips * sub.collectives[k]
+        memo[name] = acc
+        return acc
+
+    if entry is None:
+        out = HloCost()
+        for c in comps.values():
+            out.flops += c.flops
+            out.bytes += c.bytes
+            out.coll_count += c.coll_count
+            for k in COLLECTIVE_KINDS:
+                out.collectives[k] += c.collectives[k]
+        return out
+    return total(entry)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Back-compat helper: trip-scaled collective bytes by kind + total."""
+    cost = hlo_cost(hlo_text)
+    out = dict(cost.collectives)
+    out["total"] = cost.coll_total
+    out["count"] = cost.coll_count
+    return out
+
+
+def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
+    """Flat list of collective ops (un-scaled; one entry per HLO op)."""
+    comps, _ = _parse(hlo_text)
+    out: list[CollectiveOp] = []
+    for c in comps.values():
+        out.extend(c.coll_ops)
+    return out
+
+
+def top_collectives(hlo_text: str, n: int = 10) -> list[tuple[float, int, str, str]]:
+    """(total_bytes, scale, kind, line) for the n largest trip-scaled
+    collective ops — the §Perf iteration's profile view."""
+    comps, entry = _parse(hlo_text)
+    scales: dict[str, int] = {}
+
+    def walk(name, scale, depth=0):
+        if name not in comps or depth > 64:
+            return
+        scales[name] = scales.get(name, 0) + scale
+        c = comps[name]
+        for callee in c.fusion_calls + c.control_calls:
+            walk(callee, scale, depth + 1)
+        for cond, body, trip in c.whiles:
+            t = trip if trip is not None else (
+                comps[cond].max_const if cond in comps else 1
+            )
+            walk(body, scale * t, depth + 1)
+
+    if entry:
+        walk(entry, 1)
+    rows = []
+    for name, sc in scales.items():
+        for op in comps[name].coll_ops:
+            rows.append((float(op.bytes_in) * sc, sc, op.kind, op.line))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]

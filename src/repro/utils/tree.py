@@ -1,0 +1,47 @@
+"""Small pytree utilities used across the framework."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (or ShapeDtypeStructs)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    """Cast every inexact leaf of a pytree to ``dtype``."""
+
+    def _cast(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact):
+            return jnp.asarray(x, dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves of a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# repo root on sys.path so `import benchmarks` works under any pytest rootdir
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# Tests run on the single real CPU device.  The 512-device dry-run sets
+# XLA_FLAGS itself in its own process (see repro/launch/dryrun.py); never here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,73 @@
+"""Unit tests for dry-run machinery that need no devices."""
+
+import pytest
+
+from repro.config import SHAPES, get_arch, supports_shape
+from repro.configs import ASSIGNED_ARCHS
+
+
+def test_variant_parsing():
+    from repro.launch.dryrun import parse_variant
+
+    opts = parse_variant("coupled-bf16res-fsdp")
+    assert opts["grad_mode"] == "coupled"
+    assert opts["overrides"]["residual_dtype"] == "bfloat16"
+    assert opts["fsdp"] and not opts["zero1"]
+    assert parse_variant("")["grad_mode"] is None
+    with pytest.raises(ValueError):
+        parse_variant("nonsense")
+
+
+def test_shape_skip_rules():
+    long = SHAPES["long_500k"]
+    runs = [a for a in ASSIGNED_ARCHS if supports_shape(get_arch(a).config, long)]
+    assert sorted(runs) == ["rwkv6-7b", "zamba2-7b"]
+    for a in ASSIGNED_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert supports_shape(get_arch(a).config, SHAPES[s])
+
+
+def test_assigned_configs_match_spec():
+    """Spot-check exact assigned hyperparameters."""
+    c = get_arch("command-r-plus-104b").config
+    assert (c.n_layers, c.d_model, c.vocab_size) == (64, 12288, 256000)
+    assert (c.attention.n_heads, c.attention.n_kv_heads) == (96, 8)
+    z = get_arch("zamba2-7b").config
+    assert (z.n_layers, z.d_model, z.ssm.d_state, z.hybrid_attn_every) == (81, 3584, 64, 6)
+    m = get_arch("llama4-maverick-400b-a17b").config
+    assert (m.moe.n_experts, m.moe.top_k, m.moe.interleave) == (128, 1, 2)
+    g = get_arch("granite-34b").config
+    assert (g.attention.n_kv_heads, g.ffn_kind) == (1, "gelu_mlp")
+    w = get_arch("whisper-small").config
+    assert (w.encoder_layers, w.n_layers, w.d_model) == (12, 12, 768)
+    # parameter budgets within 15% of the advertised sizes
+    budgets = {
+        "yi-6b": 6e9, "glm4-9b": 9.4e9, "granite-34b": 34e9,
+        "command-r-plus-104b": 104e9, "rwkv6-7b": 7.6e9,
+        "llava-next-34b": 34e9, "zamba2-7b": 7e9,
+        "llama4-maverick-400b-a17b": 400e9,
+    }
+    for name, target in budgets.items():
+        n = get_arch(name).config.param_count()
+        assert abs(n - target) / target < 0.15, (name, n, target)
+
+
+def test_param_count_estimator_matches_actual_init():
+    """The MODEL_FLOPS estimator must track the real parameter tree (reduced
+    configs; frontend/bias constants dominate only at toy scale, so the
+    tolerance is loose for the stub-frontend archs)."""
+    import jax
+
+    from repro.models import build_model
+
+    for name in ASSIGNED_ARCHS:
+        model, cfg = build_model(get_arch(name).reduced)
+        actual = sum(
+            v.size
+            for v in jax.tree_util.tree_leaves(
+                jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            )
+        )
+        est = cfg.param_count()
+        tol = 0.35 if cfg.frontend is not None or cfg.is_enc_dec else 0.10
+        assert abs(est - actual) / actual < tol, (name, est, actual)

@@ -1,0 +1,59 @@
+"""Elastic scaling: a checkpoint written under one mesh restores under a
+*different* mesh shape with correct values and new shardings (subprocess
+tests with 8 host devices)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+def test_checkpoint_restores_onto_different_mesh(tmp_path):
+    _run(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.config import get_arch
+    from repro.dist.sharding import params_pspecs, to_shardings
+    from repro.models import build_model
+    from repro.train import checkpoint as ckpt
+
+    spec = get_arch("yi-6b")
+    model, cfg = build_model(spec.reduced)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # save under a (4 data, 2 model) mesh
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    sh_a = to_shardings(params_pspecs(params, mesh_a), mesh_a)
+    params_a = jax.device_put(params, sh_a)
+    ckpt.save({{"params": params_a}}, r"{tmp_path}", 7)
+
+    # restore under a (2 data, 4 model) mesh — elastic restart
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+    sh_b = to_shardings(params_pspecs(params, mesh_b), mesh_b)
+    restored, step = ckpt.restore(
+        {{"params": params}}, r"{tmp_path}", shardings={{"params": sh_b}}
+    )
+    assert step == 7
+    flat_r = jax.tree_util.tree_leaves(restored["params"])
+    flat_0 = jax.tree_util.tree_leaves(params)
+    for a, b in zip(flat_r, flat_0):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # at least the big 2-D leaves must actually be sharded on the new mesh
+    wq = restored["params"]["blocks"]["attn"]["attn"]["wq"]
+    assert not wq.sharding.is_fully_replicated
+    print("elastic restore ok")
+    """)

@@ -1,0 +1,117 @@
+"""Unit tests for the trip-count-scaled HLO cost walker — the §Roofline
+measurement instrument itself must be trustworthy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.hlo import collective_bytes, hlo_cost, parse_hlo_collectives
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_matches_xla_on_scanfree_graph():
+    def f(a, b, c):
+        return jnp.sum(jnp.tanh(a @ b) @ c, axis=1)
+
+    specs = [
+        jax.ShapeDtypeStruct(s, jnp.float32)
+        for s in ((512, 256), (256, 1024), (1024, 128))
+    ]
+    co = _compile(f, *specs)
+    ca = co.cost_analysis()
+    w = hlo_cost(co.as_text())
+    np.testing.assert_allclose(w.flops, ca["flops"], rtol=0.05)
+    np.testing.assert_allclose(w.bytes, ca["bytes accessed"], rtol=0.05)
+
+
+def test_scales_scan_bodies_by_trip_count():
+    length = 10
+
+    def g(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, None, length=length)
+        return y
+
+    co = _compile(
+        g,
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((8, 256), jnp.float32),
+    )
+    ratio = hlo_cost(co.as_text()).flops / co.cost_analysis()["flops"]
+    assert abs(ratio - length) < 0.5, f"expected ~{length}x scan scaling, got {ratio}"
+
+
+def test_dot_flops_exact():
+    m, k, n = 128, 512, 64
+
+    def f(a, b):
+        return a @ b
+
+    co = _compile(
+        f,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    w = hlo_cost(co.as_text())
+    assert abs(w.flops - 2 * m * k * n) / (2 * m * k * n) < 0.05
+
+
+def test_collective_parsing_synthetic_hlo():
+    hlo = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond (p: (s32[], f32[4,8])) -> pred[] {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %x = f32[4,8] get-tuple-element(%p), index=1
+  %ar = f32[4,8]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4,8]) tuple(%i, %ar)
+}
+
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %x = f32[4,8] parameter(0)
+  %ag = f32[4,8]{1,0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  %init = s32[] constant(0)
+  %tup = (s32[], f32[4,8]) tuple(%init, %ag)
+  %w = (s32[], f32[4,8]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[4,8] get-tuple-element(%w), index=1
+}
+"""
+    cb = collective_bytes(hlo)
+    # all-reduce inside the while: 4*8*4 bytes * 7 trips
+    assert cb["all-reduce"] == 4 * 8 * 4 * 7
+    # all-gather at top level: result/group = 128/4
+    assert cb["all-gather"] == 4 * 8 * 4 // 4
+    assert cb["total"] == cb["all-reduce"] + cb["all-gather"]
+    ops = parse_hlo_collectives(hlo)
+    assert {o.kind for o in ops} == {"all-reduce", "all-gather"}
+
+
+def test_reduce_scatter_group_scaling():
+    hlo = """
+ENTRY %main (x: f32[16,8]) -> f32[4,8] {
+  %x = f32[16,8] parameter(0)
+  ROOT %rs = f32[4,8]{1,0} reduce-scatter(%x), replica_groups=[2,4]<=[8], dimensions={0}
+}
+"""
+    cb = collective_bytes(hlo)
+    # operand bytes = result * group = 4*8*4 * 4
+    assert cb["reduce-scatter"] == 4 * 8 * 4 * 4

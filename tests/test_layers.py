@@ -1,0 +1,176 @@
+"""Per-layer invertibility and logdet correctness.
+
+Every invertible layer is checked for (a) ``inverse(forward(x)) == x`` and
+(b) ``logdet == slogdet(jacobian(forward))`` on small inputs — the same CI
+guarantees the paper advertises (§4).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ActNorm,
+    AffineCoupling,
+    Conv1x1,
+    HINTCoupling,
+    HaarSqueeze,
+    HyperbolicLayer,
+    Squeeze,
+)
+from repro.nn.nets import CouplingCNN, CouplingMLP
+
+RNG = jax.random.PRNGKey(42)
+
+def _perturb(v, scale, key):
+    """Perturb float leaves only — integer buffers (permutations, signs) are
+    structural and must never be touched (mirrors optimizer behaviour)."""
+    import jax, jax.numpy as jnp
+    if jnp.issubdtype(v.dtype, jnp.inexact):
+        return v + scale * jax.random.normal(key, v.shape, v.dtype)
+    return v
+
+
+
+def _mlp_factory(d_out):
+    return CouplingMLP(d_out, hidden=16, depth=1)
+
+
+def _cnn_factory(c_out):
+    return CouplingCNN(c_out, hidden=8)
+
+
+def _check_roundtrip(layer, params, x, cond=None, tol=1e-4):
+    y, ld = layer.forward(params, x, cond)
+    x2 = layer.inverse(params, y, cond)
+    err = jax.tree_util.tree_map(lambda a, b: float(jnp.max(jnp.abs(a - b))), x, x2)
+    assert max(jax.tree_util.tree_leaves(err)) < tol
+    b = jax.tree_util.tree_leaves(x)[0].shape[0]
+    assert ld.shape == (b,)
+
+
+def _check_logdet(layer, params, x, cond=None, tol=1e-3):
+    """Compare the layer's logdet to the exact slogdet of its Jacobian."""
+
+    def flat_fwd(xf):
+        y, _ = layer.forward(params, xf.reshape(x.shape), cond)
+        return y.reshape(-1)
+
+    _, ld = layer.forward(params, x, cond)
+    jac = jax.jacfwd(flat_fwd)(x.reshape(-1))
+    _, ref = np.linalg.slogdet(np.asarray(jac, np.float64))
+    np.testing.assert_allclose(float(jnp.sum(ld)), ref, rtol=tol, atol=tol)
+
+
+# one-sample inputs so the full Jacobian is the per-sample Jacobian
+@pytest.mark.parametrize("shape", [(1, 6), (1, 4, 4, 2)])
+def test_actnorm(shape):
+    x = jax.random.normal(RNG, shape)
+    layer = ActNorm()
+    params = layer.init(RNG, x)
+    params = ActNorm.ddi(params, x + 1.5)  # exercise data-dependent init too
+    _check_roundtrip(layer, params, x)
+    _check_logdet(layer, params, x)
+
+
+@pytest.mark.parametrize("shape", [(1, 6), (1, 4, 4, 4)])
+def test_conv1x1(shape):
+    x = jax.random.normal(RNG, shape)
+    layer = Conv1x1()
+    params = layer.init(RNG, x)
+    _check_roundtrip(layer, params, x, tol=1e-3)
+    _check_logdet(layer, params, x)
+
+
+@pytest.mark.parametrize("flip", [False, True])
+@pytest.mark.parametrize("additive", [False, True])
+def test_affine_coupling_dense(flip, additive):
+    x = jax.random.normal(RNG, (1, 7))  # odd dim: asymmetric split
+    layer = AffineCoupling(_mlp_factory, flip=flip, additive=additive)
+    params = layer.init(RNG, x)
+    # force non-trivial transform (last layer is zero-init)
+    params = jax.tree_util.tree_map(
+        lambda v: _perturb(v, 0.3, RNG), params
+    )
+    _check_roundtrip(layer, params, x)
+    _check_logdet(layer, params, x)
+
+
+def test_affine_coupling_conditional():
+    x = jax.random.normal(RNG, (3, 6))
+    cond = jax.random.normal(jax.random.PRNGKey(7), (3, 4))
+    layer = AffineCoupling(_mlp_factory)
+    params = layer.init(RNG, x, d_cond=4)
+    params = jax.tree_util.tree_map(
+        lambda v: _perturb(v, 0.3, RNG), params
+    )
+    _check_roundtrip(layer, params, x, cond=cond)
+
+
+def test_affine_coupling_image():
+    x = jax.random.normal(RNG, (2, 4, 4, 4))
+    layer = AffineCoupling(_cnn_factory)
+    params = layer.init(RNG, x)
+    params = jax.tree_util.tree_map(
+        lambda v: _perturb(v, 0.1, RNG), params
+    )
+    _check_roundtrip(layer, params, x)
+
+
+@pytest.mark.parametrize("cls", [HaarSqueeze, Squeeze])
+def test_squeezes(cls):
+    x = jax.random.normal(RNG, (2, 6, 6, 3))
+    layer = cls()
+    params = layer.init(RNG, x)
+    y, ld = layer.forward(params, x)
+    assert y.shape == (2, 3, 3, 12)
+    assert float(jnp.max(jnp.abs(ld))) == 0.0  # volume preserving
+    x2 = layer.inverse(params, y)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-6)
+
+
+def test_haar_orthonormal():
+    """Haar squeeze preserves the L2 norm (orthonormality)."""
+    x = jax.random.normal(RNG, (2, 8, 8, 3))
+    layer = HaarSqueeze()
+    y, _ = layer.forward({}, x)
+    np.testing.assert_allclose(
+        float(jnp.sum(x**2)), float(jnp.sum(y**2)), rtol=1e-5
+    )
+
+
+def test_hint_coupling():
+    x = jax.random.normal(RNG, (1, 8))
+    layer = HINTCoupling(_mlp_factory, depth=2)
+    params = layer.init(RNG, x)
+    params = jax.tree_util.tree_map(
+        lambda v: _perturb(v, 0.3, RNG), params
+    )
+    _check_roundtrip(layer, params, x)
+    _check_logdet(layer, params, x)
+
+
+def test_hint_conditional():
+    x = jax.random.normal(RNG, (4, 8))
+    cond = jax.random.normal(jax.random.PRNGKey(3), (4, 5))
+    layer = HINTCoupling(_mlp_factory, depth=2)
+    params = layer.init(RNG, x, d_cond=5)
+    params = jax.tree_util.tree_map(
+        lambda v: _perturb(v, 0.3, RNG), params
+    )
+    _check_roundtrip(layer, params, x, cond=cond)
+
+
+@pytest.mark.parametrize("conv", [False, True])
+def test_hyperbolic(conv):
+    shape = (2, 4, 4, 3) if conv else (2, 6)
+    x = jax.random.normal(RNG, shape)
+    state = (x, x + 0.1)
+    layer = HyperbolicLayer(alpha=0.3, conv=conv)
+    params = layer.init(RNG, state)
+    y, ld = layer.forward(params, state)
+    assert float(jnp.max(jnp.abs(ld))) == 0.0
+    s2 = layer.inverse(params, y)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(state, s2))
+    assert err < 1e-4

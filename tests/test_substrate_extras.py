@@ -1,0 +1,74 @@
+"""Tests for the scale-out substrate extras: async checkpointing, data
+prefetch, gradient accumulation."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_arch
+from repro.data import SyntheticTokens
+from repro.data.pipeline import Prefetcher
+from repro.models import build_model
+from repro.optim.accum import accumulate_grads
+from repro.train.async_ckpt import AsyncCheckpointer
+from repro.train import checkpoint as ckpt
+
+
+def test_async_checkpointer_roundtrip(tmp_path):
+    state = {"a": jnp.arange(16.0), "b": {"c": jnp.ones((4, 4))}}
+    acp = AsyncCheckpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        acp.save(jax.tree_util.tree_map(lambda v: v * step, state), step)
+    acp.wait()
+    assert acp.completed == [1, 2, 3]
+    restored, step = ckpt.restore(state, str(tmp_path))
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(restored["a"]), np.arange(16.0) * 3)
+
+
+def test_async_checkpointer_snapshot_isolation(tmp_path):
+    """The saved state must be the value at save() time, not at write time."""
+    acp = AsyncCheckpointer(str(tmp_path))
+    state = {"x": jnp.zeros(4)}
+    acp.save(state, 1)
+    state = {"x": jnp.ones(4)}  # mutate after handing off
+    acp.wait()
+    restored, _ = ckpt.restore(state, str(tmp_path))
+    np.testing.assert_allclose(np.asarray(restored["x"]), np.zeros(4))
+
+
+def test_prefetcher_matches_direct_and_is_ordered():
+    data = SyntheticTokens(100, seq_len=8, batch=4, seed=3)
+    pf = Prefetcher(data.batch_at, start_step=5, lookahead=3)
+    try:
+        for expect in (5, 6, 7, 8):
+            step, batch = pf.get()
+            assert step == expect
+            ref = data.batch_at(step)
+            np.testing.assert_array_equal(
+                np.asarray(batch["tokens"]), np.asarray(ref["tokens"])
+            )
+    finally:
+        pf.close()
+
+
+def test_grad_accumulation_matches_full_batch():
+    spec = get_arch("yi-6b")
+    model, cfg = build_model(spec.reduced, dtype="float32", residual_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticTokens(cfg.vocab_size, 16, 8, seed=0)
+    batch = data.batch_at(0)
+
+    def loss_fn(p, b):
+        return model.train_loss(p, b)
+
+    loss_full, _, g_full = accumulate_grads(loss_fn, params, batch, 1)
+    loss_acc, _, g_acc = accumulate_grads(loss_fn, params, batch, 4)
+    # microbatch losses average over micro dims; token counts equal per slice
+    assert abs(float(loss_full) - float(loss_acc)) < 5e-3
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b.astype(a.dtype)))), g_acc, g_full
+    )
+    assert max(jax.tree_util.tree_leaves(diffs)) < 5e-3
