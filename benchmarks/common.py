@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -24,3 +26,13 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(name: str, payload: dict, out_dir: str = "artifacts/bench"):
+    """Write ``artifacts/bench/BENCH_<name>.json`` — machine-comparable
+    metrics alongside the human CSV (one file per bench, overwritten)."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path

@@ -1,28 +1,43 @@
 """Flow-training throughput (the paper's native workload): GLOW on synthetic
-images, invertible vs autodiff gradients — the compute cost of the paper's
-memory-for-compute trade measured directly."""
+images, sweeping the gradient engine — ``invertible`` (the paper's
+recompute-by-inversion VJP), ``coupled`` (fused reversible backward through
+the Pallas coupling/conv1x1 kernels; EXPERIMENTS.md §Perf/H1) and
+``autodiff`` (the normflows-style plain-AD baseline).  The compute cost of
+the memory-for-compute trade measured directly, per grad mode."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_json, time_fn
 from repro.core import build_glow, value_and_grad_nll
 from repro.data import SyntheticImages
+
+GRAD_MODE_SWEEP = ("invertible", "coupled", "autodiff")
 
 
 def run():
     data = SyntheticImages(size=32, batch=8, seed=0)
     x = data.batch_at(0)
-    for mode in ("invertible", "autodiff"):
+    rows = {}
+    for mode in GRAD_MODE_SWEEP:
         flow = build_glow(n_scales=2, k_steps=4, hidden=32, grad_mode=mode)
         params = flow.init(jax.random.PRNGKey(0), x)
         f = jax.jit(lambda p, xx: value_and_grad_nll(flow.forward, p, xx))
         us = time_fn(f, params, x)
         loss, _ = f(params, x)
         imgs_s = x.shape[0] / (us / 1e6)
+        rows[mode] = {"us_per_step": us, "imgs_per_s": imgs_s, "nll": float(loss)}
         emit(f"glow_train_32px/{mode}", us, f"imgs_per_s={imgs_s:.1f} nll={float(loss):.3f}")
+    # all three engines must optimize the same objective
+    nlls = [r["nll"] for r in rows.values()]
+    spread = max(nlls) - min(nlls)
+    emit("glow_train_32px/nll_spread", 0.0, f"max_loss_spread={spread:.2e}")
+    emit_json(
+        "flow_training",
+        {"workload": "glow_train_32px", "grad_modes": rows, "nll_spread": spread},
+    )
 
 
 if __name__ == "__main__":

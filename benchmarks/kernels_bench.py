@@ -11,11 +11,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, emit_json, time_fn
 from repro.kernels.attention.ops import flash_sdpa
 from repro.kernels.attention.ref import attention_ref
-from repro.kernels.coupling.ops import fused_coupling_fwd
-from repro.kernels.coupling.ref import coupling_fwd_ref
+from repro.kernels.coupling.ops import fused_coupling_bwd, fused_coupling_fwd
+from repro.kernels.coupling.ref import (
+    coupling_bwd_ref,
+    coupling_fwd_ref,
+    coupling_inv_ref,
+)
 from repro.kernels.rwkv.ops import rwkv6_wkv
 from repro.kernels.rwkv.ref import wkv_ref
 from repro.kernels.ssd.ops import mamba2_ssd
@@ -44,6 +48,31 @@ def run():
     err = float(jnp.max(jnp.abs(y - y_ref))) + float(jnp.max(jnp.abs(ld - ld_ref)))
     us = time_fn(jax.jit(coupling_fwd_ref), x, raw, t)
     emit("kernel/fused_coupling", us, f"max_err_vs_ref={err:.2e}")
+
+    # fused coupling backward (reversible VJP; EXPERIMENTS.md §Perf/H1) —
+    # the XLA oracle is the generic two-pass baseline the kernel replaces:
+    # invert to reconstruct x, then a separate VJP of the forward.
+    gy = jax.random.normal(jax.random.PRNGKey(3), x.shape)
+    gld = jax.random.normal(jax.random.PRNGKey(4), (x.shape[0],))
+    out_k = fused_coupling_bwd(y, raw, t, gy, gld)
+    out_ref = coupling_bwd_ref(y, raw, t, gy, gld)
+    err = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(out_k, out_ref)
+    )
+
+    def bwd_oracle(y_, raw_, t_, gy_, gld_):
+        x_ = coupling_inv_ref(y_, raw_, t_)
+        _, vjp = jax.vjp(coupling_fwd_ref, x_, raw_, t_)
+        return (x_,) + vjp((gy_, gld_))
+
+    us = time_fn(jax.jit(bwd_oracle), y, raw, t, gy, gld)
+    emit("kernel/fused_coupling_bwd", us, f"max_err_vs_ref={err:.2e}")
+    emit_json(
+        "coupling_bwd",
+        {"kernel": "fused_coupling_bwd", "max_err_vs_ref": err,
+         "oracle_us": us, "oracle": "invert_then_vjp(xla)"},
+    )
 
     # ssd
     b, h, s, p, n = 1, 4, 256, 32, 16

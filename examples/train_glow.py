@@ -24,7 +24,7 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-mode", default="invertible",
-                    choices=["invertible", "autodiff"])
+                    choices=["invertible", "coupled", "autodiff"])
     ap.add_argument("--ckpt", default="checkpoints/glow")
     args = ap.parse_args()
 

@@ -15,12 +15,20 @@ class FlowConfig:
     hidden: int = 64
     n_scales: int = 3
     k_steps: int = 8
+    # "invertible" (paper: recompute-by-inversion custom VJP), "coupled"
+    # (fused reversible backward through the Pallas coupling/conv1x1 kernels;
+    # EXPERIMENTS.md §Perf/H1) or "autodiff" (normflows-style baseline).
     grad_mode: str = "invertible"
 
 
 GLOW_PAPER = FlowConfig(name="glow-paper", kind="glow", n_scales=3, k_steps=8, hidden=64)
 # the exact setting of the paper's Fig. 1/2: RGB images, batch 8
 GLOW_FIG1 = FlowConfig(name="glow-fig1", kind="glow", n_scales=3, k_steps=8, hidden=64)
+# the Fig. 1 net on the fused kernel-backward training path (§Perf/H1)
+GLOW_COUPLED = FlowConfig(
+    name="glow-coupled", kind="glow", n_scales=3, k_steps=8, hidden=64,
+    grad_mode="coupled",
+)
 REALNVP_2D = FlowConfig(name="realnvp-2d", kind="realnvp", depth=8, hidden=128)
 CHINT_POSTERIOR = FlowConfig(name="chint-posterior", kind="chint", depth=4, hidden=128)
 

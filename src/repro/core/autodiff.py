@@ -20,6 +20,15 @@ Two engines are provided:
 Both take a ``grad_mode``:
 
 * ``"invertible"`` — the paper's technique (custom VJP, recompute by inversion).
+* ``"coupled"``    — fused reversible backward (EXPERIMENTS.md §Perf/H1).  In
+  the chain engine, layers that expose ``fused_bwd(params, y, gy, gld, cond)
+  -> (x, gx, gparams, gcond)`` hand-fuse the inverse reconstruction with the
+  local VJP so each sub-network (coupling conditioner) is evaluated **once**
+  in the backward instead of twice (~4/3 forward-equivalents of compute vs
+  the generic 5/3); layers without the hook fall back to the generic
+  invert-then-vjp step.  ``AffineCoupling`` and ``Conv1x1`` implement the
+  hook, backed by the Pallas coupling-backward / conv1x1 kernels.  In the
+  scan engine the same contract is provided per-step via ``step_bwd``.
 * ``"autodiff"``   — identical math through plain ``jax.grad``; the stand-in
   for the PyTorch/``normflows`` baseline the paper compares against.
 * ``"remat"``      — (scan engine) classic gradient checkpointing on the layer
@@ -75,7 +84,9 @@ def make_chain_apply(
     ``params_tuple`` must have one entry per layer.  With
     ``grad_mode="invertible"`` the returned function carries a custom VJP whose
     residuals are only ``(params, output, cond)`` — intermediate activations
-    are never stored.
+    are never stored.  ``grad_mode="coupled"`` keeps the same residuals but
+    dispatches to each layer's ``fused_bwd`` hook when present (see module
+    docstring), falling back to the generic invert-then-vjp step otherwise.
     """
     layers = tuple(layers)
 
@@ -91,8 +102,11 @@ def make_chain_apply(
             return plain_apply(params, x, cond)
 
         return plain
-    if grad_mode != "invertible":
-        raise ValueError(f"chain engine supports invertible|autodiff, got {grad_mode}")
+    if grad_mode not in ("invertible", "coupled"):
+        raise ValueError(
+            f"chain engine supports invertible|coupled|autodiff, got {grad_mode}"
+        )
+    use_fused = grad_mode == "coupled"
 
     @jax.custom_vjp
     def apply(params, x, cond):
@@ -107,18 +121,27 @@ def make_chain_apply(
     def apply_bwd(res, cts):
         params, y, cond = res
         gy, gld = cts
+        gld = gld.astype(jnp.float32)
         gparams: list[Any] = [None] * len(layers)
         gcond = None
         for k in range(len(layers) - 1, -1, -1):
             layer, p = layers[k], params[k]
-            # 1. reconstruct this layer's input from its output
-            x = _stop(layer.inverse(p, y, cond))
-            # 2. differentiate the *single* layer locally (ordinary AD inside)
-            y2, vjp = jax.vjp(
-                lambda p_, x_, c_, _l=layer: _l.forward(p_, x_, c_), p, x, cond
-            )
-            gy = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gy, y2[0])
-            gp, gx, gc = vjp((gy, gld.astype(y2[1].dtype)))
+            fused = getattr(layer, "fused_bwd", None) if use_fused else None
+            if fused is not None:
+                # fused reversible step: reconstruction and local VJP share
+                # one evaluation of the layer's sub-networks (§Perf/H1)
+                x, gx, gp, gc = fused(p, y, gy, gld, cond)
+                x = _stop(x)
+            else:
+                # 1. reconstruct this layer's input from its output
+                x = _stop(layer.inverse(p, y, cond))
+                # 2. differentiate the *single* layer locally (ordinary AD inside)
+                y2, vjp = jax.vjp(
+                    lambda p_, x_, c_, _l=layer: _l.forward(p_, x_, c_), p, x, cond
+                )
+                gy = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gy, y2[0])
+                gp, gx, gc = vjp((gy, gld.astype(y2[1].dtype)))
+            gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
             gparams[k] = gp
             gcond = _tree_add(gcond, gc)
             gy, y = gx, x

@@ -71,6 +71,23 @@ class OnFirst(Invertible):
         x0 = self.layer.inverse(params, state[0], cond)
         return (x0,) + tuple(state[1:])
 
+    def __getattr__(self, name):
+        # expose the grad_mode="coupled" hook only when the wrapped layer
+        # implements it, so the chain engine's getattr probe falls back to
+        # the generic invert-then-vjp step otherwise.
+        if name == "fused_bwd" and hasattr(self.__dict__.get("layer"), "fused_bwd"):
+            return self._lifted_fused_bwd
+        raise AttributeError(name)
+
+    def _lifted_fused_bwd(self, params, state, gstate, gld, cond=None):
+        x0, gx0, gp, gc = self.layer.fused_bwd(params, state[0], gstate[0], gld, cond)
+        return (
+            (x0,) + tuple(state[1:]),
+            (gx0,) + tuple(gstate[1:]),
+            gp,
+            gc,
+        )
+
 
 class Split(Invertible):
     """GLOW factor-out: move half the channels of the working tensor into the

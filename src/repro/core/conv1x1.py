@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.scipy.linalg import solve_triangular
 
-from repro.core.types import Invertible
+from repro.core.types import Invertible, float0_like
 
 
 class Conv1x1(Invertible):
@@ -67,3 +67,42 @@ class Conv1x1(Invertible):
         b = solve_triangular(u_full, solve_triangular(l_full, eye, lower=True), lower=False)
         w_inv = b[:, params["inv_perm"]].astype(y.dtype)
         return y @ w_inv
+
+    # -- grad_mode="coupled" hook ------------------------------------------
+    def fused_bwd(self, params, y, gy, gld, cond=None):
+        """Fused reversible backward: ``(x, gx, gparams, gcond)``.
+
+        Skips the generic path's re-forward: ``x = y @ W^-1`` (two triangular
+        solves), ``gx = gy @ W^T``, ``gW = sum x^T gy``, then the LU chain
+        rule maps ``gW`` onto the (l, u, log_s) parameterization; the logdet
+        cotangent lands directly on ``log_s``.
+        """
+        l_full, u_full = self._lu(params)
+        a = l_full @ u_full
+        w = a[params["inv_perm"]]
+        x = lax.stop_gradient(self.inverse(params, y, cond))
+        gx = (gy @ w.T.astype(gy.dtype)).astype(y.dtype)
+        # weight cotangent, f32-accumulated over batch + spatial positions
+        gw = jnp.einsum(
+            "...i,...j->ij", x.astype(jnp.float32), gy.astype(jnp.float32)
+        )
+        # undo the row permutation: W = A[inv_perm]  =>  gA[inv_perm] = gW
+        ga = jnp.zeros_like(gw).at[params["inv_perm"]].set(gw)
+        ga = ga.astype(l_full.dtype)
+        gl_full = ga @ u_full.T
+        gu_full = l_full.T @ ga
+        sign = params["sign_s"].astype(params["log_s"].dtype)
+        g_diag = jnp.diagonal(gu_full).astype(params["log_s"].dtype)
+        # diag(U) = sign * exp(log_s): matmul path + the logdet cotangent
+        # (logdet = spatial * sum(log_s) broadcast over the batch)
+        g_log_s = g_diag * sign * jnp.exp(params["log_s"]) + self._spatial(
+            x
+        ) * jnp.sum(gld.astype(params["log_s"].dtype))
+        gparams = {
+            "inv_perm": float0_like(params["inv_perm"]),
+            "l": jnp.tril(gl_full, -1).astype(params["l"].dtype),
+            "u": jnp.triu(gu_full, 1).astype(params["u"].dtype),
+            "sign_s": float0_like(params["sign_s"]),
+            "log_s": g_log_s,
+        }
+        return x, gx, gparams, None

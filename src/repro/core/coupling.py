@@ -5,6 +5,17 @@ the memory-frugal engine it is differentiated by ordinary AD *locally* — the
 package's ChainRules-interop story.  Log-scales are soft-clamped
 (FrEIA-style ``clamp * tanh(s / clamp)``) so the inverse is numerically stable
 at any training stage.
+
+Kernel integration (``repro.kernels.coupling``):
+
+* ``kernel_inverse`` — route the sampling inverse through the fused Pallas
+  inverse kernel.
+* ``kernel_training`` — route the *training* affine math through the fused
+  Pallas forward kernel (differentiable via its custom VJP) and the fused
+  backward kernel inside :meth:`fused_bwd`.
+* :meth:`fused_bwd` — the ``grad_mode="coupled"`` hook: reconstructs the
+  input from the output and emits all cotangents with a **single**
+  conditioner evaluation (the generic invert-then-vjp path needs two).
 """
 
 from __future__ import annotations
@@ -27,18 +38,23 @@ class AffineCoupling(Invertible):
       additive: NICE-style shift-only coupling (logdet == 0, exactly
         invertible in any dtype).
       clamp: soft-clamp bound for log-scales.
+      kernel_inverse: use the fused Pallas kernel on the inverse (sampling)
+        path.
+      kernel_training: use the fused Pallas kernels on the training path —
+        forward through ``fused_coupling_fwd`` (differentiable custom VJP)
+        and, under ``grad_mode="coupled"``, backward through the fused
+        ``coupling_bwd`` kernel.
     """
 
     def __init__(self, conditioner_factory, flip: bool = False, additive: bool = False,
-                 clamp: float = 2.0, kernel_inverse: bool = False):
+                 clamp: float = 2.0, kernel_inverse: bool = False,
+                 kernel_training: bool = False):
         self._factory = conditioner_factory
         self.flip = flip
         self.additive = additive
         self.clamp = clamp
-        # use the fused Pallas kernel (repro.kernels.coupling) on the inverse
-        # (sampling) path — it is forward-only (no AD rule), which is exactly
-        # what sampling needs; the training path stays on differentiable XLA.
         self.kernel_inverse = kernel_inverse
+        self.kernel_training = kernel_training
 
     def _split(self, x):
         c = x.shape[-1]
@@ -62,7 +78,6 @@ class AffineCoupling(Invertible):
         return {"net": net.init(rng, cb, d_cond)}
 
     def _net_out(self, params, xb, cond):
-        c_out = None
         net = self._factory(0)  # d_out unused at apply time
         h = net.apply(params["net"], xb, cond)
         return h
@@ -75,8 +90,28 @@ class AffineCoupling(Invertible):
         log_s = self.clamp * jnp.tanh(log_s_raw / self.clamp)
         return log_s, t
 
+    # -- (B, M, C) flattening for the Pallas kernels ------------------------
+    @staticmethod
+    def _flat_mc(shape):
+        m = 1
+        for d in shape[1:-1]:
+            m *= d
+        return m
+
+    @staticmethod
+    def _block_m(m):
+        from repro.kernels.common import pick_block_m
+
+        return pick_block_m(m)
+
     def forward(self, params, x, cond=None):
         xa, xb = self._split(x)
+        if self.kernel_training and not self.additive:
+            h = self._net_out(params, xb, cond)
+            ca = xa.shape[-1]
+            raw, t = h[..., :ca], h[..., ca:]
+            ya, ld = self._kernel_fwd(xa, raw, t)
+            return self._merge(ya, xb), ld
         log_s, t = self._scale_shift(params, xb, cond, xa.shape[-1])
         if log_s is None:
             ya = xa + t
@@ -100,16 +135,78 @@ class AffineCoupling(Invertible):
         xa = (ya - t) if log_s is None else (ya - t) * jnp.exp(-log_s)
         return self._merge(xa, yb)
 
+    def _kernel_fwd(self, xa, raw, t):
+        from repro.kernels.coupling.ops import fused_coupling_fwd
+
+        shape = xa.shape
+        m = self._flat_mc(shape)
+        flat = lambda v: v.reshape(shape[0], m, shape[-1])
+        ya, ld = fused_coupling_fwd(
+            flat(xa), flat(raw), flat(t), clamp=self.clamp, block_m=self._block_m(m)
+        )
+        return ya.reshape(shape), ld
+
     def _kernel_inv(self, ya, raw, t):
         from repro.kernels.coupling.ops import fused_coupling_inv
 
         shape = ya.shape
-        m = 1
-        for d in shape[1:-1]:
-            m *= d
+        m = self._flat_mc(shape)
         flat = lambda v: v.reshape(shape[0], m, shape[-1])
-        block_m = m if m % 256 else 256
         xa = fused_coupling_inv(
-            flat(ya), flat(raw), flat(t), clamp=self.clamp, block_m=block_m
+            flat(ya), flat(raw), flat(t), clamp=self.clamp, block_m=self._block_m(m)
         )
         return xa.reshape(shape)
+
+    # -- grad_mode="coupled" hook ------------------------------------------
+    def fused_bwd(self, params, y, gy, gld, cond=None):
+        """Fused reversible backward from the *output* side.
+
+        Returns ``(x, gx, gparams, gcond)``.  The conditioner is evaluated
+        exactly once (inside ``jax.vjp``); its reverse pass consumes the
+        cotangents of ``(raw, t)`` produced — for the affine case — by the
+        fused Pallas backward kernel in a single VMEM pass that also
+        reconstructs the transformed half.
+        """
+        ya, yb = self._split(y)
+        gya, gyb = self._split(gy)
+        ca = ya.shape[-1]
+        yb = jax.lax.stop_gradient(yb)
+        h, net_vjp = jax.vjp(
+            lambda p_, xb_, c_: self._net_out(p_, xb_, c_), params, yb, cond
+        )
+        if self.additive:
+            t = h
+            xa = ya - t
+            gxa = gya
+            gh = gya.astype(h.dtype)
+        else:
+            raw, t = h[..., :ca], h[..., ca:]
+            xa, gxa, graw, gt = self._fused_affine_bwd(ya, raw, t, gya, gld)
+            gh = jnp.concatenate([graw, gt], axis=-1)
+        gp, gxb_net, gc = net_vjp(gh)
+        gxb = gyb.astype(yb.dtype) + gxb_net.astype(yb.dtype)
+        x = self._merge(jax.lax.stop_gradient(xa), yb)
+        gx = self._merge(gxa, gxb)
+        return x, gx, gp, gc
+
+    def _fused_affine_bwd(self, ya, raw, t, gya, gld):
+        """Single-pass affine backward on the (B, M, C) view: the Pallas
+        kernel when ``kernel_training``, else its jnp oracle (one source of
+        truth for the math either way)."""
+        from repro.kernels.coupling.ops import fused_coupling_bwd
+        from repro.kernels.coupling.ref import coupling_bwd_ref
+
+        shape = ya.shape
+        m = self._flat_mc(shape)
+        flat = lambda v: v.reshape(shape[0], m, shape[-1])
+        if self.kernel_training:
+            xa, gxa, graw, gt = fused_coupling_bwd(
+                flat(ya), flat(raw), flat(t), flat(gya), gld,
+                clamp=self.clamp, block_m=self._block_m(m),
+            )
+        else:
+            xa, gxa, graw, gt = coupling_bwd_ref(
+                flat(ya), flat(raw), flat(t), flat(gya), gld, clamp=self.clamp
+            )
+        unflat = lambda v: v.reshape(shape)
+        return unflat(xa), unflat(gxa), unflat(graw), unflat(gt)

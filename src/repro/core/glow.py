@@ -25,11 +25,18 @@ def build_glow(
     haar: bool = True,
     clamp: float = 2.0,
     kernel_inverse: bool = False,
+    kernel_training: bool | None = None,
 ) -> InvertibleChain:
     """Build a GLOW net for (B, H, W, C) inputs; H, W divisible by 2**n_scales.
 
     ``kernel_inverse`` routes the sampling path through the fused Pallas
-    coupling kernel (training stays on differentiable XLA)."""
+    coupling kernel.  ``kernel_training`` routes the *training* path through
+    the fused kernels too (forward via the differentiable custom-VJP kernel;
+    backward via the fused ``coupling_bwd`` kernel under
+    ``grad_mode="coupled"``); it defaults to on exactly when
+    ``grad_mode="coupled"``."""
+    if kernel_training is None:
+        kernel_training = grad_mode == "coupled"
     factory = lambda c_out: CouplingCNN(c_out, hidden=hidden)
     squeeze = HaarSqueeze if haar else Squeeze
     layers = [Pack()]
@@ -40,7 +47,12 @@ def build_glow(
             layers.append(OnFirst(Conv1x1()))
             layers.append(
                 OnFirst(
-                    AffineCoupling(factory, clamp=clamp, kernel_inverse=kernel_inverse)
+                    AffineCoupling(
+                        factory,
+                        clamp=clamp,
+                        kernel_inverse=kernel_inverse,
+                        kernel_training=kernel_training,
+                    )
                 )
             )
         if scale != n_scales - 1:

@@ -15,14 +15,27 @@ def build_realnvp(
     grad_mode: str = "invertible",
     additive: bool = False,
     clamp: float = 2.0,
+    kernel_training: bool = False,
 ) -> InvertibleChain:
     """ActNorm + alternating affine couplings; conditional if ``cond`` is
-    passed at call time (the conditioner consumes it)."""
+    passed at call time (the conditioner consumes it).
+
+    ``grad_mode="coupled"`` uses the fused reversible backward (one
+    conditioner evaluation per coupling in the backward pass);
+    ``kernel_training`` additionally routes the affine math through the
+    fused Pallas kernels (tabular inputs flatten to a single-position tile,
+    so this mainly matters for testing the kernel path end-to-end)."""
     factory = lambda d_out: CouplingMLP(d_out, hidden=hidden, depth=mlp_depth)
     layers = []
     for i in range(depth):
         layers.append(ActNorm())
         layers.append(
-            AffineCoupling(factory, flip=bool(i % 2), additive=additive, clamp=clamp)
+            AffineCoupling(
+                factory,
+                flip=bool(i % 2),
+                additive=additive,
+                clamp=clamp,
+                kernel_training=kernel_training,
+            )
         )
     return InvertibleChain(layers, grad_mode=grad_mode)

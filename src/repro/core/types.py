@@ -67,6 +67,18 @@ def zero_logdet(x: PyTree) -> jax.Array:
     return jnp.zeros((leaves[0].shape[0],), dtype=jnp.result_type(leaves[0].dtype, jnp.float32))
 
 
+def float0_like(v) -> "np.ndarray":
+    """Zero cotangent for an integer buffer leaf.
+
+    Hand-written ``fused_bwd`` hooks must return cotangents whose structure
+    matches what ``jax.vjp`` would emit: integer leaves (permutations, signs)
+    get ``float0`` arrays, which optimizers and gradient transforms skip.
+    """
+    import numpy as np
+
+    return np.zeros(jnp.shape(v), jax.dtypes.float0)
+
+
 def example_array(x: PyTree) -> jax.Array:
     """Materialize an example input for ``init`` from a ShapeDtypeStruct pytree."""
 

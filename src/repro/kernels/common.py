@@ -12,3 +12,23 @@ def use_interpret() -> bool:
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def pick_block_m(m: int, target: int = 256) -> int:
+    """Largest divisor of ``m`` that is <= ``target``.
+
+    The coupling/conv1x1 wrappers tile the flattened spatial axis in blocks
+    that must divide ``m`` exactly; for ragged sizes (prime-ish ``m``) naive
+    ``min(target, m)`` either trips the divisibility assert or silently
+    degenerates to one giant block.  A divisor search keeps every shape legal;
+    worst case (``m`` prime and > target) falls back to row-at-a-time blocks,
+    which is still correct.
+    """
+    if m <= 0:
+        raise ValueError(f"m must be positive, got {m}")
+    if m <= target:
+        return m
+    for b in range(target, 0, -1):
+        if m % b == 0:
+            return b
+    return 1

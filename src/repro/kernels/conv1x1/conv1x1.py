@@ -25,6 +25,45 @@ def _kernel(x_ref, w_ref, y_ref):
     y_ref[...] = y[None].astype(y_ref.dtype)
 
 
+def _gw_kernel(x_ref, gy_ref, gw_ref):
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+
+    @pl.when((b == 0) & (m == 0))
+    def _init():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    gy = gy_ref[...].astype(jnp.float32)
+    gw_ref[...] += jax.lax.dot_general(
+        x[0], gy[0], (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def conv1x1_gw(x, gy, *, block_m: int = 256, interpret: bool = True):
+    """Weight cotangent ``gW = sum_{b,m} x[b,m,:]^T gy[b,m,:]`` -> (C, C) f32.
+
+    Same layout as the forward: position tiles stream through VMEM while the
+    (C, C) accumulator stays resident (grid iteration is sequential on TPU,
+    so successive steps accumulate into the single output block).
+    """
+    b, m, c = x.shape
+    block_m = min(block_m, m)
+    assert m % block_m == 0, (m, block_m)
+    return pl.pallas_call(
+        _gw_kernel,
+        grid=(b, m // block_m),
+        in_specs=[
+            pl.BlockSpec((1, block_m, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_m, c), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, c), lambda i, j: (0, 0)),  # accumulated
+        out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
+        interpret=interpret,
+    )(x, gy)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def conv1x1_mm(x, w, *, block_m: int = 256, interpret: bool = True):
     """x: (B, M, C); w: (C, C) -> (B, M, C)."""

@@ -1,10 +1,40 @@
-"""Public wrapper for the 1x1-conv kernel."""
+"""Public wrapper for the 1x1-conv kernel, with a custom VJP.
+
+The backward reuses the same VMEM-resident-W layout in both directions:
+``gx = gy @ W^T`` is the forward kernel applied to the transposed weight, and
+``gW = sum_{b,m} x^T gy`` streams position tiles against a (C, C) accumulator
+that never leaves VMEM (``conv1x1_gw``).
+"""
 
 from __future__ import annotations
 
-from repro.kernels.common import use_interpret
-from repro.kernels.conv1x1.conv1x1 import conv1x1_mm
+import functools
+
+import jax
+
+from repro.kernels.common import pick_block_m, use_interpret
+from repro.kernels.conv1x1.conv1x1 import conv1x1_gw, conv1x1_mm
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def invertible_conv1x1(x, w, block_m: int = 256):
-    return conv1x1_mm(x, w, block_m=block_m, interpret=use_interpret())
+    bm = pick_block_m(x.shape[1], block_m)
+    return conv1x1_mm(x, w, block_m=bm, interpret=use_interpret())
+
+
+def _conv_fwd(x, w, block_m):
+    bm = pick_block_m(x.shape[1], block_m)
+    y = conv1x1_mm(x, w, block_m=bm, interpret=use_interpret())
+    return y, (x, w)
+
+
+def _conv_bwd(block_m, res, gy):
+    x, w = res
+    bm = pick_block_m(x.shape[1], block_m)
+    interp = use_interpret()
+    gx = conv1x1_mm(gy, w.T, block_m=bm, interpret=interp)
+    gw = conv1x1_gw(x, gy, block_m=bm, interpret=interp)
+    return gx, gw.astype(w.dtype)
+
+
+invertible_conv1x1.defvjp(_conv_fwd, _conv_bwd)

@@ -1,14 +1,57 @@
-"""Public wrapper for the fused coupling kernel (auto interpret off-TPU)."""
+"""Public wrappers for the fused coupling kernel (auto interpret off-TPU).
+
+``fused_coupling_fwd`` carries a ``jax.custom_vjp`` whose backward is the
+fused ``coupling_bwd`` Pallas kernel: the residuals are ``(y, raw, t)`` — the
+*output* side only — and the backward pass reconstructs ``x`` in VMEM while
+emitting all three cotangents in the same tile visit.  This makes the kernel
+trainable (flow training routes through it with ``grad_mode="coupled"``),
+not just usable on the sampling inverse.
+"""
 
 from __future__ import annotations
 
+import functools
+
+import jax
+
 from repro.kernels.common import use_interpret
-from repro.kernels.coupling.coupling import coupling_fwd, coupling_inv
+from repro.kernels.coupling.coupling import coupling_bwd, coupling_fwd, coupling_inv
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def fused_coupling_fwd(x, raw, t, clamp: float = 2.0, block_m: int = 256):
-    return coupling_fwd(x, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret())
+    return coupling_fwd(
+        x, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret()
+    )
+
+
+def _fwd_fwd(x, raw, t, clamp, block_m):
+    y, ld = coupling_fwd(
+        x, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret()
+    )
+    # memory story: residuals are the *output* (y, raw, t); x is reconstructed
+    # inside the backward kernel, never stored across the fwd/bwd boundary.
+    return (y, ld), (y, raw, t)
+
+
+def _fwd_bwd(clamp, block_m, res, cts):
+    y, raw, t = res
+    gy, gld = cts
+    _x, gx, graw, gt = coupling_bwd(
+        y, raw, t, gy, gld, clamp=clamp, block_m=block_m, interpret=use_interpret()
+    )
+    return gx, graw, gt
+
+
+fused_coupling_fwd.defvjp(_fwd_fwd, _fwd_bwd)
 
 
 def fused_coupling_inv(y, raw, t, clamp: float = 2.0, block_m: int = 256):
     return coupling_inv(y, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret())
+
+
+def fused_coupling_bwd(y, raw, t, gy, gld, clamp: float = 2.0, block_m: int = 256):
+    """Fused reversible backward: ``(x, gx, graw, gt)`` from the output side."""
+    return coupling_bwd(
+        y, raw, t, gy, gld, clamp=clamp, block_m=block_m, interpret=use_interpret()
+    )

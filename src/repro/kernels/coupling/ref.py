@@ -16,3 +16,20 @@ def coupling_inv_ref(y, raw, t, clamp: float = 2.0):
     log_s = clamp * jnp.tanh(raw.astype(jnp.float32) / clamp)
     x = (y.astype(jnp.float32) - t.astype(jnp.float32)) * jnp.exp(-log_s)
     return x.astype(y.dtype)
+
+
+def coupling_bwd_ref(y, raw, t, gy, gld, clamp: float = 2.0):
+    """Oracle for the fused backward: (x, gx, graw, gt) from the output side."""
+    th = jnp.tanh(raw.astype(jnp.float32) / clamp)
+    log_s = clamp * th
+    e_s = jnp.exp(log_s)
+    gy32 = gy.astype(jnp.float32)
+    x = (y.astype(jnp.float32) - t.astype(jnp.float32)) * jnp.exp(-log_s)
+    gx = gy32 * e_s
+    graw = (gy32 * x * e_s + gld.astype(jnp.float32)[:, None, None]) * (1.0 - th * th)
+    return (
+        x.astype(y.dtype),
+        gx.astype(y.dtype),
+        graw.astype(raw.dtype),
+        gy32.astype(t.dtype),
+    )

@@ -26,17 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SHAPES, ShapeSpec, TrainConfig, get_arch, supports_shape
-from repro.dist.sharding import (
-    batch_pspecs,
-    cache_pspecs,
-    opt_pspecs,
-    params_pspecs,
-    to_shardings,
-)
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, input_specs
 from repro.optim import adamw_init, adamw_update, cosine_warmup
-from repro.utils.hlo import hlo_cost, top_collectives
+from repro.utils.hlo import hlo_cost, top_collectives, xla_cost_analysis
 
 
 def make_train_step(model, tcfg: TrainConfig, grad_mode=None, grad_specs=None,
@@ -116,6 +109,16 @@ def _maybe_wkvchunk(cfg, variant):
 
 def lower_cell(arch: str, shape: ShapeSpec, mesh, mesh_name: str, variant: str = ""):
     """Lower+compile one cell; returns the artifact dict."""
+    # deferred: the sharding helpers live in an optional distribution package;
+    # importing this module (e.g. for parse_variant) must not require it.
+    from repro.dist.sharding import (
+        batch_pspecs,
+        cache_pspecs,
+        opt_pspecs,
+        params_pspecs,
+        to_shardings,
+    )
+
     opts = parse_variant(variant)
     model, cfg = build_model(arch, **opts["overrides"])
     if "wkvchunk" in variant:
@@ -225,7 +228,7 @@ def lower_cell(arch: str, shape: ShapeSpec, mesh, mesh_name: str, variant: str =
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     walk = hlo_cost(hlo)  # trip-count-scaled (scan bodies x L)
     coll = dict(walk.collectives)

@@ -191,6 +191,10 @@ def _parse(hlo_text: str) -> tuple[dict[str, _Comp], str | None]:
             cm = _CALLS_RE.search(line) or re.search(r"to_apply=%?([\w.\-]+)", line)
             if cm:
                 cur.control_calls.append(cm.group(1))
+                # the call boundary itself moves no bytes — the callee's ops
+                # are traversed and carry the cost (newer XLA wraps parallel
+                # elementwise regions in `call`s; counting both double-counts)
+                continue
         elif opcode == "conditional":
             bm = _BRANCHES_RE.search(line)
             if bm:
@@ -259,6 +263,19 @@ class HloCost:
     @property
     def coll_total(self) -> int:
         return sum(self.collectives[k] for k in COLLECTIVE_KINDS)
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``.
+
+    Older jaxlib returns a dict; newer jaxlib returns a (usually one-element)
+    list of per-executable dicts.  Returns a single flat dict either way so
+    callers can index ``["flops"]`` / ``["bytes accessed"]`` directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 
 def hlo_cost(hlo_text: str) -> HloCost:

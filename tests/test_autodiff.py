@@ -59,6 +59,113 @@ def test_chain_gradients_match_autodiff_glow():
     assert _max_leaf_diff(g1, g2) < 1e-4
 
 
+# ---------------------------------------------------------------------------
+# fused "coupled" chain backward (EXPERIMENTS.md §Perf/H1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel_training", [False, True])
+def test_coupled_chain_gradients_match_autodiff_dense(kernel_training):
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (8, 6))
+    flow_c = build_realnvp(
+        depth=6, hidden=32, grad_mode="coupled", kernel_training=kernel_training
+    )
+    flow_ad = build_realnvp(depth=6, hidden=32, grad_mode="autodiff")
+    params = flow_c.init(rng, x)
+    l1, g1 = value_and_grad_nll(flow_c.forward, params, x)
+    l2, g2 = value_and_grad_nll(flow_ad.forward, params, x)
+    assert abs(float(l1 - l2)) < 1e-5
+    assert _max_leaf_diff(g1, g2) < 1e-4
+
+
+def test_coupled_chain_gradients_match_autodiff_glow():
+    """GLOW with the full kernel training path: fused Pallas coupling
+    forward/backward + Conv1x1 fused_bwd, vs the plain-AD baseline."""
+    rng = jax.random.PRNGKey(1)
+    x = jax.random.normal(rng, (2, 8, 8, 3))
+    flow_c = build_glow(n_scales=2, k_steps=2, hidden=8, grad_mode="coupled")
+    flow_ad = build_glow(n_scales=2, k_steps=2, hidden=8, grad_mode="autodiff")
+    params = flow_c.init(rng, x)
+    l1, g1 = value_and_grad_nll(flow_c.forward, params, x)
+    l2, g2 = value_and_grad_nll(flow_ad.forward, params, x)
+    assert abs(float(l1 - l2)) < 1e-5
+    assert _max_leaf_diff(g1, g2) < 1e-4
+
+
+def test_coupled_chain_gradients_match_autodiff_additive():
+    rng = jax.random.PRNGKey(2)
+    x = jax.random.normal(rng, (4, 6))
+    flow_c = build_realnvp(depth=4, hidden=16, additive=True, grad_mode="coupled")
+    flow_ad = build_realnvp(depth=4, hidden=16, additive=True, grad_mode="autodiff")
+    params = flow_c.init(rng, x)
+    _, g1 = value_and_grad_nll(flow_c.forward, params, x)
+    _, g2 = value_and_grad_nll(flow_ad.forward, params, x)
+    assert _max_leaf_diff(g1, g2) < 1e-4
+
+
+def test_coupled_chain_gradients_match_autodiff_conditional():
+    """cond cotangents accumulate correctly through the fused hook."""
+    from repro.core import AffineCoupling, InvertibleChain
+    from repro.nn.nets import CouplingMLP
+
+    rng = jax.random.PRNGKey(3)
+    x = jax.random.normal(rng, (4, 6))
+    cond = jax.random.normal(jax.random.PRNGKey(4), (4, 3))
+    factory = lambda d_out: CouplingMLP(d_out, hidden=16, depth=1)
+    layers = [AffineCoupling(factory), AffineCoupling(factory, flip=True)]
+    ch_c = InvertibleChain(layers, grad_mode="coupled")
+    ch_ad = InvertibleChain(layers, grad_mode="autodiff")
+    params = ch_c.init(rng, x, cond=cond)
+
+    def loss(apply):
+        def L(p, c_):
+            z, ld = apply(p, x, c_)
+            return jnp.sum(z**2) - jnp.sum(ld)
+
+        return L
+
+    g1 = jax.grad(loss(ch_c.forward), argnums=(0, 1))(params, cond)
+    g2 = jax.grad(loss(ch_ad.forward), argnums=(0, 1))(params, cond)
+    assert _max_leaf_diff(g1, g2) < 1e-4
+
+
+class _CountingNet:
+    """Conditioner wrapper whose apply() bumps a counter on every trace —
+    the probe for how many times the backward evaluates each conditioner."""
+
+    def __init__(self, inner, counter):
+        self.inner = inner
+        self.counter = counter
+
+    def init(self, rng, d_in, d_cond=0):
+        return self.inner.init(rng, d_in, d_cond)
+
+    def apply(self, params, x, cond=None):
+        self.counter[0] += 1
+        return self.inner.apply(params, x, cond)
+
+
+@pytest.mark.parametrize("mode,calls_per_layer", [("invertible", 3), ("coupled", 2)])
+def test_coupled_backward_evaluates_conditioner_once(mode, calls_per_layer):
+    """The fused chain backward evaluates each coupling conditioner ONCE
+    (forward 1 + backward 1 = 2 traces/layer); the generic invert-then-vjp
+    path needs two backward evaluations (forward 1 + inverse 1 + vjp 1 = 3)."""
+    from repro.core import AffineCoupling, InvertibleChain
+    from repro.nn.nets import CouplingMLP
+
+    counter = [0]
+    factory = lambda d_out: _CountingNet(CouplingMLP(d_out, hidden=8, depth=1), counter)
+    depth = 3
+    layers = [AffineCoupling(factory, flip=bool(i % 2)) for i in range(depth)]
+    chain = InvertibleChain(layers, grad_mode=mode)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6))
+    params = chain.init(jax.random.PRNGKey(0), x)
+    counter[0] = 0
+    value_and_grad_nll(chain.forward, params, x)
+    assert counter[0] == calls_per_layer * depth, (mode, counter[0])
+
+
 def _grad_temp_bytes(depth, mode):
     flow = build_realnvp(depth=depth, hidden=128, grad_mode=mode)
     x = jnp.zeros((32, 32))
