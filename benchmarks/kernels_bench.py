@@ -7,6 +7,13 @@ the XLA oracle time gives the baseline the TPU kernel must beat.
 
 from __future__ import annotations
 
+import os
+import sys
+
+# repo root on sys.path so `python benchmarks/kernels_bench.py` works
+# standalone (CI) as well as `python -m benchmarks.kernels_bench`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,6 +33,51 @@ from repro.kernels.ssd.ops import mamba2_ssd
 from repro.kernels.ssd.ref import ssd_ref
 
 RNG = jax.random.PRNGKey(0)
+
+
+def run_smoke():
+    """CI sanity pass: tiny shapes, flow kernels only, hard-fails on error.
+
+    Interpret-mode Pallas on CPU is slow, so the full ``run()`` is minutes of
+    wall clock; this keeps the CI kernel gate to seconds while still
+    executing every coupling-kernel body end-to-end (fwd, bwd, inverse).
+    """
+    from repro.kernels.coupling.ops import fused_coupling_inv
+
+    x = jax.random.normal(RNG, (2, 64, 4))
+    raw = jax.random.normal(jax.random.PRNGKey(1), x.shape)
+    t = jax.random.normal(jax.random.PRNGKey(2), x.shape)
+    gy = jax.random.normal(jax.random.PRNGKey(3), x.shape)
+    gld = jax.random.normal(jax.random.PRNGKey(4), (x.shape[0],))
+    y, ld = fused_coupling_fwd(x, raw, t, block_m=64)
+    y_ref, ld_ref = coupling_fwd_ref(x, raw, t)
+    err = float(jnp.max(jnp.abs(y - y_ref))) + float(jnp.max(jnp.abs(ld - ld_ref)))
+    assert err < 1e-4, f"coupling fwd drifted from oracle: {err}"
+    emit("smoke/fused_coupling", 0.0, f"max_err_vs_ref={err:.2e}")
+
+    out_k = fused_coupling_bwd(y, raw, t, gy, gld, block_m=64)
+    out_ref = coupling_bwd_ref(y, raw, t, gy, gld)
+    err = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(out_k, out_ref)
+    )
+    assert err < 1e-4, f"coupling bwd drifted from oracle: {err}"
+    emit("smoke/fused_coupling_bwd", 0.0, f"max_err_vs_ref={err:.2e}")
+
+    x2 = fused_coupling_inv(y, raw, t, block_m=64)
+    err = float(jnp.max(jnp.abs(x2 - coupling_inv_ref(y_ref, raw, t))))
+    assert err < 1e-4, f"coupling inv drifted from oracle: {err}"
+    emit("smoke/fused_coupling_inv", 0.0, f"max_err_vs_ref={err:.2e}")
+
+    from repro.kernels.conv1x1.ops import invertible_conv1x1
+    from repro.kernels.conv1x1.ref import conv1x1_mm_ref
+
+    c = 6
+    xc = jax.random.normal(RNG, (2, 64, c))
+    w = jax.random.normal(jax.random.PRNGKey(5), (c, c))
+    err = float(jnp.max(jnp.abs(invertible_conv1x1(xc, w) - conv1x1_mm_ref(xc, w))))
+    assert err < 1e-4, f"conv1x1 drifted from oracle: {err}"
+    emit("smoke/conv1x1_mm", 0.0, f"max_err_vs_ref={err:.2e}")
+    print("kernel smoke: OK")
 
 
 def run():
@@ -102,4 +154,12 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="fast CI sanity pass (flow kernels only, tiny shapes)",
+    )
+    args = ap.parse_args()
+    run_smoke() if args.smoke else run()

@@ -23,8 +23,13 @@ from repro.optim import adamw_init, adamw_update, cosine_warmup
 def main(steps: int = 600):
     rng = jax.random.PRNGKey(0)
     prob = SyntheticInverseProblem(d_theta=8, d_y=16, sigma=0.5, batch=256)
-    flow = build_chint(depth=3, recursion=2, hidden=64)
-    model = ConditionalFlow(flow, SummaryMLP(d_out=32, hidden=64))
+    # training through the fused reversible backward (every HINT cross-
+    # coupling conditioner evaluated once per backward, EXPERIMENTS.md
+    # §Perf/H1); sampling through the kernel-backed inverse twin, which
+    # shares the same parameter pytree.
+    flow = build_chint(depth=3, recursion=2, hidden=64, grad_mode="coupled")
+    sample_flow = build_chint(depth=3, recursion=2, hidden=64, kernel_inverse=True)
+    model = ConditionalFlow(flow, SummaryMLP(d_out=32, hidden=64), sample_flow=sample_flow)
 
     b0 = prob.batch_at(0)
     params = model.init(rng, b0["theta"], b0["y"])

@@ -10,7 +10,7 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class FlowConfig:
     name: str
-    kind: str  # realnvp | glow | chint
+    kind: str  # realnvp | glow | chint | hyperbolic
     depth: int = 8
     hidden: int = 64
     n_scales: int = 3
@@ -31,10 +31,20 @@ GLOW_COUPLED = FlowConfig(
 )
 REALNVP_2D = FlowConfig(name="realnvp-2d", kind="realnvp", depth=8, hidden=128)
 CHINT_POSTERIOR = FlowConfig(name="chint-posterior", kind="chint", depth=4, hidden=128)
+# cHINT on the fused recursive backward (one cross-conditioner eval per
+# backward, kernel-backed leaves)
+CHINT_COUPLED = FlowConfig(
+    name="chint-coupled", kind="chint", depth=4, hidden=128, grad_mode="coupled"
+)
+# volume-preserving leapfrog net (paper §3: hyperbolic networks); depth is
+# the layer count — O(1) activation memory makes it arbitrarily extendable
+HYPERBOLIC_DEEP = FlowConfig(
+    name="hyperbolic-deep", kind="hyperbolic", depth=16, grad_mode="coupled"
+)
 
 
 def build_flow(cfg: FlowConfig, grad_mode: str | None = None):
-    from repro.core import build_chint, build_glow, build_realnvp
+    from repro.core import build_chint, build_glow, build_hyperbolic, build_realnvp
 
     gm = grad_mode or cfg.grad_mode
     if cfg.kind == "glow":
@@ -45,4 +55,6 @@ def build_flow(cfg: FlowConfig, grad_mode: str | None = None):
         return build_realnvp(depth=cfg.depth, hidden=cfg.hidden, grad_mode=gm)
     if cfg.kind == "chint":
         return build_chint(depth=cfg.depth, hidden=cfg.hidden, grad_mode=gm)
+    if cfg.kind == "hyperbolic":
+        return build_hyperbolic(depth=cfg.depth, grad_mode=gm)
     raise ValueError(cfg.kind)

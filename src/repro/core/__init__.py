@@ -20,7 +20,7 @@ from repro.core.distributions import (
 from repro.core.glow import build_glow
 from repro.core.haar import HaarSqueeze, Squeeze
 from repro.core.hint import HINTCoupling
-from repro.core.hyperbolic import HyperbolicLayer
+from repro.core.hyperbolic import HyperbolicLayer, build_hyperbolic
 from repro.core.objectives import amortized_vi_loss, nll_bits_per_dim, nll_loss
 from repro.core.realnvp import build_realnvp
 from repro.core.types import Invertible
@@ -29,7 +29,8 @@ __all__ = [
     "ActNorm", "AffineCoupling", "ConditionalFlow", "Conv1x1", "GRAD_MODES",
     "HINTCoupling", "HaarSqueeze", "HyperbolicLayer", "Invertible",
     "InvertibleChain", "OnFirst", "Pack", "Split", "Squeeze", "SummaryMLP",
-    "amortized_vi_loss", "build_chint", "build_glow", "build_realnvp",
+    "amortized_vi_loss", "build_chint", "build_glow", "build_hyperbolic",
+    "build_realnvp",
     "flatten_state", "make_chain_apply", "make_scan_apply",
     "nll_bits_per_dim", "nll_loss", "std_normal_logpdf", "std_normal_sample",
     "value_and_grad_nll",

@@ -26,9 +26,16 @@ Both take a ``grad_mode``:
   local VJP so each sub-network (coupling conditioner) is evaluated **once**
   in the backward instead of twice (~4/3 forward-equivalents of compute vs
   the generic 5/3); layers without the hook fall back to the generic
-  invert-then-vjp step.  ``AffineCoupling`` and ``Conv1x1`` implement the
-  hook, backed by the Pallas coupling-backward / conv1x1 kernels.  In the
-  scan engine the same contract is provided per-step via ``step_bwd``.
+  invert-then-vjp step.  The whole zoo implements the hook — couplings
+  (``AffineCoupling``, recursive ``HINTCoupling``) backed by the Pallas
+  coupling-backward kernel, ``Conv1x1`` (LU-aware hand backward),
+  ``ActNorm`` (closed form), the squeezes (orthonormal/permutation
+  transpose == inverse), ``HyperbolicLayer`` (leapfrog transpose), the
+  multiscale ``Split``/``Pack`` state wrappers, and ``InvertibleChain``
+  itself (nested chains reuse :func:`chain_backward`, so inner layers stay
+  fused) — see the conformance matrix in EXPERIMENTS.md and the engagement
+  probe in ``tests/test_conformance.py``.  In the scan engine the same
+  contract is provided per-step via ``step_bwd``.
 * ``"autodiff"``   — identical math through plain ``jax.grad``; the stand-in
   for the PyTorch/``normflows`` baseline the paper compares against.
 * ``"remat"``      — (scan engine) classic gradient checkpointing on the layer
@@ -76,6 +83,45 @@ def _zero_logdet(x: PyTree) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def chain_backward(layers, params, y, gy, gld, cond, use_fused: bool):
+    """Reverse pass over a layer chain from the *output* side.
+
+    Returns ``(x, gx, gparams_list, gcond)`` — the reconstructed chain input,
+    its cotangent, per-layer parameter cotangents and the accumulated
+    conditioning cotangent.  With ``use_fused`` each layer's ``fused_bwd``
+    hook is taken when present (one sub-network evaluation per layer);
+    otherwise — and for layers without the hook — the generic
+    invert-then-vjp step runs.  Shared by the ``grad_mode="coupled"`` /
+    ``"invertible"`` chain VJP and by ``InvertibleChain.fused_bwd`` (so
+    *nested* chains inside a coupled outer chain stay fused).
+    """
+    gld = gld.astype(jnp.float32)
+    gparams: list[Any] = [None] * len(layers)
+    gcond = None
+    for k in range(len(layers) - 1, -1, -1):
+        layer, p = layers[k], params[k]
+        fused = getattr(layer, "fused_bwd", None) if use_fused else None
+        if fused is not None:
+            # fused reversible step: reconstruction and local VJP share
+            # one evaluation of the layer's sub-networks (§Perf/H1)
+            x, gx, gp, gc = fused(p, y, gy, gld, cond)
+            x = _stop(x)
+        else:
+            # 1. reconstruct this layer's input from its output
+            x = _stop(layer.inverse(p, y, cond))
+            # 2. differentiate the *single* layer locally (ordinary AD inside)
+            y2, vjp = jax.vjp(
+                lambda p_, x_, c_, _l=layer: _l.forward(p_, x_, c_), p, x, cond
+            )
+            gy = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gy, y2[0])
+            gp, gx, gc = vjp((gy, gld.astype(y2[1].dtype)))
+        gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
+        gparams[k] = gp
+        gcond = _tree_add(gcond, gc)
+        gy, y = gx, x
+    return y, gy, gparams, gcond
+
+
 def make_chain_apply(
     layers: Sequence[Invertible], grad_mode: str = "invertible"
 ) -> Callable[..., tuple[PyTree, jax.Array]]:
@@ -121,31 +167,10 @@ def make_chain_apply(
     def apply_bwd(res, cts):
         params, y, cond = res
         gy, gld = cts
-        gld = gld.astype(jnp.float32)
-        gparams: list[Any] = [None] * len(layers)
-        gcond = None
-        for k in range(len(layers) - 1, -1, -1):
-            layer, p = layers[k], params[k]
-            fused = getattr(layer, "fused_bwd", None) if use_fused else None
-            if fused is not None:
-                # fused reversible step: reconstruction and local VJP share
-                # one evaluation of the layer's sub-networks (§Perf/H1)
-                x, gx, gp, gc = fused(p, y, gy, gld, cond)
-                x = _stop(x)
-            else:
-                # 1. reconstruct this layer's input from its output
-                x = _stop(layer.inverse(p, y, cond))
-                # 2. differentiate the *single* layer locally (ordinary AD inside)
-                y2, vjp = jax.vjp(
-                    lambda p_, x_, c_, _l=layer: _l.forward(p_, x_, c_), p, x, cond
-                )
-                gy = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gy, y2[0])
-                gp, gx, gc = vjp((gy, gld.astype(y2[1].dtype)))
-            gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
-            gparams[k] = gp
-            gcond = _tree_add(gcond, gc)
-            gy, y = gx, x
-        return tuple(gparams), gy, gcond
+        _x, gx, gparams, gcond = chain_backward(
+            layers, params, y, gy, gld, cond, use_fused
+        )
+        return tuple(gparams), gx, gcond
 
     apply.defvjp(apply_fwd, apply_bwd)
 

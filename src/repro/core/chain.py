@@ -12,7 +12,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.autodiff import make_chain_apply
+from repro.core.autodiff import chain_backward, make_chain_apply
 from repro.core.types import Invertible, PyTree, example_array
 
 
@@ -46,6 +46,17 @@ class InvertibleChain(Invertible):
     # flow conveniences -----------------------------------------------------
     def sample(self, params, z, cond=None):
         return self.inverse(params, z, cond)
+
+    # -- grad_mode="coupled" hook ------------------------------------------
+    def fused_bwd(self, params, y, gy, gld, cond=None):
+        """Fused reversible backward for a *nested* chain: reuse the shared
+        reverse-walk so every inner layer's own ``fused_bwd`` engages —
+        chains composed inside a coupled outer chain never fall back to the
+        generic invert-then-vjp step."""
+        x, gx, gparams, gcond = chain_backward(
+            self.layers, tuple(params), y, gy, gld, cond, use_fused=True
+        )
+        return x, gx, tuple(gparams), gcond
 
 
 def _cond_dim(cond) -> int:
@@ -108,6 +119,16 @@ class Split(Invertible):
         x = jnp.concatenate([xk, zk], axis=-1)
         return (x,) + tuple(state[1:-1])
 
+    # -- grad_mode="coupled" hook ------------------------------------------
+    def fused_bwd(self, params, state, gstate, gld, cond=None):
+        """Split is a pure reshuffle of the state tuple, so the backward is
+        the same reshuffle applied to the cotangents — no compute at all."""
+        x = self.inverse(params, state, cond)
+        gx = jnp.concatenate(
+            [gstate[0].astype(x[0].dtype), gstate[-1].astype(x[0].dtype)], axis=-1
+        )
+        return x, (gx,) + tuple(gstate[1:-1]), {}, None
+
 
 class Pack(Invertible):
     """Wrap an array into the 1-tuple state used by multiscale chains."""
@@ -121,3 +142,9 @@ class Pack(Invertible):
     def inverse(self, params, state, cond=None):
         (x,) = state
         return x
+
+    # -- grad_mode="coupled" hook ------------------------------------------
+    def fused_bwd(self, params, state, gstate, gld, cond=None):
+        (x,) = state
+        (gx,) = gstate
+        return x, gx, {}, None

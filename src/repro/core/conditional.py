@@ -26,14 +26,31 @@ def build_chint(
     recursion: int = 2,
     hidden: int = 128,
     grad_mode: str = "invertible",
+    kernel_inverse: bool = False,
+    kernel_training: bool | None = None,
 ) -> InvertibleChain:
-    """Conditional HINT [6]: ActNorm + 1x1 mixing + recursive couplings."""
+    """Conditional HINT [6]: ActNorm + 1x1 mixing + recursive couplings.
+
+    ``kernel_inverse`` routes every cross-coupling inverse through the fused
+    Pallas inverse kernel (the batched-sampling path).  ``kernel_training``
+    routes the cross-coupling backward through the fused ``coupling_bwd``
+    kernel inside ``HINTCoupling.fused_bwd``; it defaults to on exactly when
+    ``grad_mode="coupled"``."""
+    if kernel_training is None:
+        kernel_training = grad_mode == "coupled"
     factory = lambda d_out: CouplingMLP(d_out, hidden=hidden, depth=2)
     layers = []
     for _ in range(depth):
         layers.append(ActNorm())
         layers.append(Conv1x1())
-        layers.append(HINTCoupling(factory, depth=recursion))
+        layers.append(
+            HINTCoupling(
+                factory,
+                depth=recursion,
+                kernel_inverse=kernel_inverse,
+                kernel_training=kernel_training,
+            )
+        )
     return InvertibleChain(layers, grad_mode=grad_mode)
 
 
@@ -52,11 +69,31 @@ class SummaryMLP:
 
 
 class ConditionalFlow:
-    """flow(theta; cond=summary(y)) with exact posterior density."""
+    """flow(theta; cond=summary(y)) with exact posterior density.
 
-    def __init__(self, flow: InvertibleChain, summary: SummaryMLP | None = None):
+    ``sample_flow`` is an optional inverse-optimized twin of ``flow`` (same
+    layer structure, hence same parameter pytree — e.g. ``build_chint(...,
+    kernel_inverse=True)``) used by the sampling paths, so the large
+    repeated-``cond`` batches of amortized posterior sampling run through the
+    fused Pallas inverse kernel instead of the plain XLA inverse.
+    """
+
+    def __init__(self, flow: InvertibleChain, summary: SummaryMLP | None = None,
+                 sample_flow: InvertibleChain | None = None):
         self.flow = flow
         self.summary = summary
+        if sample_flow is not None:
+            # the twin consumes `params["flow"]` verbatim, and a chain's
+            # inverse would silently zip-truncate a mismatched params tuple —
+            # so require structural identity upfront
+            mine = [type(l).__name__ for l in flow.layers]
+            theirs = [type(l).__name__ for l in sample_flow.layers]
+            if mine != theirs:
+                raise ValueError(
+                    "sample_flow must mirror flow layer-for-layer (it shares "
+                    f"flow's parameters); got {mine} vs {theirs}"
+                )
+        self.sample_flow = sample_flow if sample_flow is not None else flow
 
     def init(self, rng, theta, y):
         kf, ks = jax.random.split(rng)
@@ -84,13 +121,18 @@ class ConditionalFlow:
         return nll_loss(self.flow, params["flow"], theta, cond)
 
     def sample(self, params, rng, y, n: int, theta_dim: int):
-        """n posterior samples per observation (y broadcast over samples)."""
+        """n posterior samples per observation (y broadcast over samples).
+
+        The n-times-repeated ``cond`` makes this the widest batch in the
+        amortized workflow; it runs through ``sample_flow`` (the
+        ``kernel_inverse=True`` twin when one was provided) in a single
+        kernel-backed inverse call rather than the plain inverse."""
         cond = self._cond(params, y)
         cond = jnp.repeat(cond, n, axis=0)
         z = jax.random.normal(rng, (cond.shape[0], theta_dim))
-        return self.flow.inverse(params["flow"], z, cond)
+        return self.sample_flow.inverse(params["flow"], z, cond)
 
     def sample_like(self, params, rng, y, theta_like):
         cond = self._cond(params, y)
         z = std_normal_sample(rng, theta_like)
-        return self.flow.inverse(params["flow"], z, cond)
+        return self.sample_flow.inverse(params["flow"], z, cond)

@@ -90,20 +90,6 @@ class AffineCoupling(Invertible):
         log_s = self.clamp * jnp.tanh(log_s_raw / self.clamp)
         return log_s, t
 
-    # -- (B, M, C) flattening for the Pallas kernels ------------------------
-    @staticmethod
-    def _flat_mc(shape):
-        m = 1
-        for d in shape[1:-1]:
-            m *= d
-        return m
-
-    @staticmethod
-    def _block_m(m):
-        from repro.kernels.common import pick_block_m
-
-        return pick_block_m(m)
-
     def forward(self, params, x, cond=None):
         xa, xb = self._split(x)
         if self.kernel_training and not self.additive:
@@ -136,24 +122,24 @@ class AffineCoupling(Invertible):
         return self._merge(xa, yb)
 
     def _kernel_fwd(self, xa, raw, t):
+        from repro.kernels.common import block_m_for, flatten_bmc
         from repro.kernels.coupling.ops import fused_coupling_fwd
 
         shape = xa.shape
-        m = self._flat_mc(shape)
-        flat = lambda v: v.reshape(shape[0], m, shape[-1])
         ya, ld = fused_coupling_fwd(
-            flat(xa), flat(raw), flat(t), clamp=self.clamp, block_m=self._block_m(m)
+            flatten_bmc(xa), flatten_bmc(raw), flatten_bmc(t),
+            clamp=self.clamp, block_m=block_m_for(xa),
         )
         return ya.reshape(shape), ld
 
     def _kernel_inv(self, ya, raw, t):
+        from repro.kernels.common import block_m_for, flatten_bmc
         from repro.kernels.coupling.ops import fused_coupling_inv
 
         shape = ya.shape
-        m = self._flat_mc(shape)
-        flat = lambda v: v.reshape(shape[0], m, shape[-1])
         xa = fused_coupling_inv(
-            flat(ya), flat(raw), flat(t), clamp=self.clamp, block_m=self._block_m(m)
+            flatten_bmc(ya), flatten_bmc(raw), flatten_bmc(t),
+            clamp=self.clamp, block_m=block_m_for(ya),
         )
         return xa.reshape(shape)
 
@@ -193,20 +179,20 @@ class AffineCoupling(Invertible):
         """Single-pass affine backward on the (B, M, C) view: the Pallas
         kernel when ``kernel_training``, else its jnp oracle (one source of
         truth for the math either way)."""
+        from repro.kernels.common import block_m_for, flatten_bmc
         from repro.kernels.coupling.ops import fused_coupling_bwd
         from repro.kernels.coupling.ref import coupling_bwd_ref
 
         shape = ya.shape
-        m = self._flat_mc(shape)
-        flat = lambda v: v.reshape(shape[0], m, shape[-1])
         if self.kernel_training:
             xa, gxa, graw, gt = fused_coupling_bwd(
-                flat(ya), flat(raw), flat(t), flat(gya), gld,
-                clamp=self.clamp, block_m=self._block_m(m),
+                flatten_bmc(ya), flatten_bmc(raw), flatten_bmc(t), flatten_bmc(gya),
+                gld, clamp=self.clamp, block_m=block_m_for(ya),
             )
         else:
             xa, gxa, graw, gt = coupling_bwd_ref(
-                flat(ya), flat(raw), flat(t), flat(gya), gld, clamp=self.clamp
+                flatten_bmc(ya), flatten_bmc(raw), flatten_bmc(t), flatten_bmc(gya),
+                gld, clamp=self.clamp,
             )
         unflat = lambda v: v.reshape(shape)
         return unflat(xa), unflat(gxa), unflat(graw), unflat(gt)

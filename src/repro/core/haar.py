@@ -8,6 +8,7 @@ hyperbolic networks (channel change without losing information).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.types import Invertible
@@ -21,7 +22,23 @@ def _blocks(x):
     return a, b, c, d
 
 
-class HaarSqueeze(Invertible):
+class _OrthonormalSqueeze(Invertible):
+    """Shared ``grad_mode="coupled"`` hook for the parameter-free squeezes.
+
+    Both squeezes are linear maps ``y = A x`` with ``A`` orthogonal (Haar: the
+    symmetric orthonormal 2x2 wavelet basis; plain squeeze: a permutation), so
+    the transpose needed by the VJP *is* the inverse: ``gx = A^T gy =
+    inverse(gy)``.  The fused hook therefore reconstructs and differentiates
+    with two inverse applications and no conditioner at all.
+    """
+
+    def fused_bwd(self, params, y, gy, gld, cond=None):
+        x = jax.lax.stop_gradient(self.inverse(params, y, cond))
+        gx = self.inverse(params, gy.astype(y.dtype), cond)
+        return x, gx, {}, None
+
+
+class HaarSqueeze(_OrthonormalSqueeze):
     """Orthonormal Haar squeeze; involution on the block basis."""
 
     def init(self, rng, x):
@@ -56,7 +73,7 @@ class HaarSqueeze(Invertible):
         return x
 
 
-class Squeeze(Invertible):
+class Squeeze(_OrthonormalSqueeze):
     """Plain space-to-depth squeeze (RealNVP); logdet = 0."""
 
     def init(self, rng, x):

@@ -5,6 +5,20 @@ recursively, and the second half is additionally coupled on the first.  The
 resulting Jacobian is (block-)triangular, so the logdet accumulates from the
 leaf couplings.  The conditional variant (condition every coupling on an
 external ``cond``) is the paper's Bayesian-inference workhorse.
+
+Kernel integration mirrors ``AffineCoupling``:
+
+* ``kernel_inverse`` — route each cross-coupling inverse through the fused
+  Pallas inverse kernel (the batched-sampling path used by
+  ``ConditionalFlow.sample``).
+* ``kernel_training`` — route the cross-coupling affine backward through the
+  fused Pallas ``coupling_bwd`` kernel inside :meth:`fused_bwd`.
+* :meth:`fused_bwd` — the ``grad_mode="coupled"`` hook: a recursive
+  reconstruction that walks the tree *backwards* (b-subtree, cross, a-subtree)
+  and evaluates every cross-coupling conditioner exactly **once**, emitting
+  its cotangents — including the conditional (summary-network) cotangent —
+  from the same ``jax.vjp``.  The generic invert-then-vjp path evaluates each
+  conditioner twice in the backward.
 """
 
 from __future__ import annotations
@@ -12,6 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.autodiff import _tree_add
 from repro.core.coupling import AffineCoupling
 from repro.core.types import Invertible
 
@@ -20,11 +35,14 @@ class HINTCoupling(Invertible):
     """One recursive HINT coupling block over the trailing dimension."""
 
     def __init__(self, conditioner_factory, depth: int = 2, clamp: float = 2.0,
-                 use_cond: bool = True):
+                 use_cond: bool = True, kernel_inverse: bool = False,
+                 kernel_training: bool = False):
         self._factory = conditioner_factory
         self.depth = depth
         self.clamp = clamp
         self.use_cond = use_cond
+        self.kernel_inverse = kernel_inverse
+        self.kernel_training = kernel_training
         self._leaf = AffineCoupling(conditioner_factory, clamp=clamp)
 
     # -- params --------------------------------------------------------------
@@ -47,16 +65,21 @@ class HINTCoupling(Invertible):
         }
 
     # -- bijection -------------------------------------------------------------
-    def _cross(self, params, xa, cond):
+    def _cross_h(self, params, xa, cond):
+        """Raw conditioner output ``h = (raw, t)`` for the cross-coupling."""
         net = self._factory(0)
         c_in = xa
         if self.use_cond and cond is not None:
             c_in = jnp.concatenate([xa, cond.astype(xa.dtype)], axis=-1)
-        h = net.apply(params, c_in, None)
+        return net.apply(params, c_in, None)
+
+    def _h_to_ls_t(self, h):
         cb = h.shape[-1] // 2
         log_s = self.clamp * jnp.tanh(h[..., :cb] / self.clamp)
-        t = h[..., cb:]
-        return log_s, t
+        return log_s, h[..., cb:]
+
+    def _cross(self, params, xa, cond):
+        return self._h_to_ls_t(self._cross_h(params, xa, cond))
 
     def forward(self, params, x, cond=None):
         if "leaf" in params:  # recursion bottom: identity
@@ -76,7 +99,89 @@ class HINTCoupling(Invertible):
         ca = y.shape[-1] // 2
         ya, yb = y[..., :ca], y[..., ca:]
         xb_mid = self.inverse(params["b"], yb, cond)
-        log_s, t = self._cross(params["cross"], ya, cond)
-        xb = (xb_mid - t) * jnp.exp(-log_s)
+        if self.kernel_inverse:
+            h = self._cross_h(params["cross"], ya, cond)
+            cb = h.shape[-1] // 2
+            xb = self._kernel_inv(xb_mid, h[..., :cb], h[..., cb:])
+        else:
+            log_s, t = self._cross(params["cross"], ya, cond)
+            xb = (xb_mid - t) * jnp.exp(-log_s)
         xa = self.inverse(params["a"], ya, cond)
         return jnp.concatenate([xa, xb], axis=-1)
+
+    def _kernel_inv(self, yb, raw, t):
+        from repro.kernels.common import block_m_for, flatten_bmc
+        from repro.kernels.coupling.ops import fused_coupling_inv
+
+        shape = yb.shape
+        xb = fused_coupling_inv(
+            flatten_bmc(yb), flatten_bmc(raw), flatten_bmc(t), clamp=self.clamp,
+            block_m=block_m_for(yb),
+        )
+        return xb.reshape(shape)
+
+    def _affine_bwd(self, yb, raw, t, gyb, gld):
+        """One-pass cross-coupling backward: reconstruct ``xb`` and emit the
+        affine cotangents — the Pallas ``coupling_bwd`` kernel when
+        ``kernel_training``, else its jnp oracle (same math either way)."""
+        from repro.kernels.common import block_m_for, flatten_bmc
+        from repro.kernels.coupling.ops import fused_coupling_bwd
+        from repro.kernels.coupling.ref import coupling_bwd_ref
+
+        shape = yb.shape
+        fn = fused_coupling_bwd if self.kernel_training else coupling_bwd_ref
+        kw = {"block_m": block_m_for(yb)} if self.kernel_training else {}
+        xb, gxb, graw, gt = fn(
+            flatten_bmc(yb), flatten_bmc(raw), flatten_bmc(t), flatten_bmc(gyb),
+            gld, clamp=self.clamp, **kw,
+        )
+        unflat = lambda v: v.reshape(shape)
+        return unflat(xb), unflat(gxb), unflat(graw), unflat(gt)
+
+    # -- grad_mode="coupled" hook ------------------------------------------
+    def fused_bwd(self, params, y, gy, gld, cond=None):
+        """Recursive fused reversible backward: ``(x, gx, gparams, gcond)``.
+
+        Walks the coupling tree in reverse order of the forward (b-subtree,
+        then the cross-coupling, then the a-subtree).  At each node the cross
+        conditioner is evaluated once inside ``jax.vjp``; the affine
+        reconstruction + cotangents come from the fused coupling-backward
+        kernel (or its oracle), and the conditional cotangent ``gcond``
+        accumulates across every node — that is what flows back into the
+        summary network of a ``ConditionalFlow``.
+        """
+        return self._fused_bwd_node(params, y, gy, gld, cond)
+
+    def _fused_bwd_node(self, params, y, gy, gld, cond):
+        # kept separate from the public hook so the recursion does not
+        # re-enter ``fused_bwd`` (instrumentation wraps the public name to
+        # count engine dispatches — one per chain layer, not per tree node)
+        if "leaf" in params:  # identity leaf: pass cotangents through
+            return y, gy, {"leaf": None}, None
+        ca = y.shape[-1] // 2
+        ya, yb = y[..., :ca], y[..., ca:]
+        gya, gyb = gy[..., :ca], gy[..., ca:]
+        # 1. b-subtree: recover the coupled middle state and its cotangent
+        xb_mid, gxb_mid, gp_b, gc_b = self._fused_bwd_node(
+            params["b"], yb, gyb, gld, cond
+        )
+        # 2. cross-coupling: single conditioner evaluation serves both the
+        #    reconstruction of xb and the local VJP
+        ya_sg = jax.lax.stop_gradient(ya)
+        h, net_vjp = jax.vjp(
+            lambda p_, xa_, c_: self._cross_h(p_, xa_, c_),
+            params["cross"], ya_sg, cond,
+        )
+        cb = h.shape[-1] // 2
+        raw, t = h[..., :cb], h[..., cb:]
+        xb, gxb, graw, gt = self._affine_bwd(xb_mid, raw, t, gxb_mid, gld)
+        gh = jnp.concatenate([graw, gt], axis=-1).astype(h.dtype)
+        gp_cross, gya_net, gc_cross = net_vjp(gh)
+        # 3. a-subtree: ya's total cotangent = output side + conditioner side
+        gya_tot = gya.astype(ya.dtype) + gya_net.astype(ya.dtype)
+        xa, gxa, gp_a, gc_a = self._fused_bwd_node(params["a"], ya, gya_tot, gld, cond)
+        x = jnp.concatenate([xa, jax.lax.stop_gradient(xb)], axis=-1)
+        gx = jnp.concatenate([gxa, gxb.astype(x.dtype)], axis=-1)
+        gparams = {"cross": gp_cross, "a": gp_a, "b": gp_b}
+        gcond = _tree_add(_tree_add(gc_b, gc_cross), gc_a)
+        return x, gx, gparams, gcond

@@ -14,6 +14,25 @@ def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def spatial_size(shape) -> int:
+    """Flattened spatial extent M of a (B, ..., C) array — the middle axes
+    the coupling/conv1x1 wrappers collapse into the kernels' (B, M, C) view."""
+    m = 1
+    for d in shape[1:-1]:
+        m *= d
+    return max(m, 1)
+
+
+def flatten_bmc(v):
+    """Collapse a (B, ..., C) array to the kernels' (B, M, C) layout."""
+    return v.reshape(v.shape[0], spatial_size(v.shape), v.shape[-1])
+
+
+def block_m_for(v, target: int = 256) -> int:
+    """Legal block_m for a (B, ..., C) array's flattened spatial axis."""
+    return pick_block_m(spatial_size(v.shape), target)
+
+
 def pick_block_m(m: int, target: int = 256) -> int:
     """Largest divisor of ``m`` that is <= ``target``.
 

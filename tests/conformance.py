@@ -1,0 +1,386 @@
+"""The invertible-layer conformance harness (registry + checks).
+
+Every ``Invertible`` in the zoo registers a :class:`Case` here; the
+parametrized suite in ``test_conformance.py`` then enforces the
+change-of-variables contract uniformly:
+
+(a) ``inverse(forward(x)) ≈ x``                       (bijectivity)
+(b) ``logdet == log|det jacfwd(forward)|``            (exact density)
+(c) gradient parity of ``autodiff`` vs ``invertible`` vs ``coupled``
+    to <= 1e-4                                         (engine correctness)
+(d) an eval-count probe asserting the fused ``grad_mode="coupled"`` path
+    actually engages for every layer of the flow builders (no silent
+    fallback to the generic invert-then-vjp step).
+
+Adding a layer to the package without adding a ``Case`` leaves it outside
+the contract — keep this registry in sync with ``repro.core.__all__``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import (
+    ActNorm,
+    AffineCoupling,
+    Conv1x1,
+    HINTCoupling,
+    HaarSqueeze,
+    HyperbolicLayer,
+    InvertibleChain,
+    OnFirst,
+    Pack,
+    Split,
+    Squeeze,
+    build_chint,
+    build_glow,
+    build_hyperbolic,
+    build_realnvp,
+)
+from repro.nn.nets import CouplingCNN, CouplingMLP
+
+GRAD_PARITY_TOL = 1e-4
+ROUNDTRIP_TOL = 1e-4
+LOGDET_TOL = 1e-3
+
+
+def mlp_factory(d_out):
+    return CouplingMLP(d_out, hidden=16, depth=1)
+
+
+def cnn_factory(c_out):
+    return CouplingCNN(c_out, hidden=8)
+
+
+@dataclass
+class Case:
+    """One conformance registry entry: a layer plus its example data."""
+
+    name: str
+    layer: Callable[[], object]               # fresh Invertible per test
+    example: Callable[[jax.Array], object]    # rng -> example input pytree
+    cond: Optional[Callable[[jax.Array], jax.Array]] = None
+    perturb: float = 0.1
+    # jax.jacfwd cannot pierce custom_vjp functions, so layers whose forward
+    # routes through the Pallas custom-VJP kernel skip the jacobian check
+    # (their math is pinned by the kernel-parity tests instead).
+    logdet_jacobian: bool = True
+
+    def make(self, rng):
+        layer = self.layer()
+        x = self.example(rng)
+        cond = None if self.cond is None else self.cond(jax.random.fold_in(rng, 7))
+        try:
+            params = layer.init(rng, x, d_cond=0 if cond is None else cond.shape[-1])
+        except TypeError:
+            params = layer.init(rng, x)
+        if self.perturb:
+            params = perturb(params, jax.random.fold_in(rng, 13), self.perturb)
+        return layer, params, x, cond
+
+
+def perturb(params, key, scale):
+    """Perturb float leaves only — integer buffers (permutations, signs) are
+    structural and must never be touched (mirrors optimizer behaviour)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [
+        v + scale * jax.random.normal(k, v.shape, v.dtype)
+        if jnp.issubdtype(jnp.asarray(v).dtype, jnp.inexact)
+        else v
+        for v, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _arr(shape):
+    return lambda rng: jax.random.normal(rng, shape)
+
+
+def _pair(shape):
+    def mk(rng):
+        k1, k2 = jax.random.split(rng)
+        return (jax.random.normal(k1, shape), jax.random.normal(k2, shape))
+
+    return mk
+
+
+def _state(*shapes):
+    def mk(rng):
+        ks = jax.random.split(rng, len(shapes))
+        return tuple(jax.random.normal(k, s) for k, s in zip(ks, shapes))
+
+    return mk
+
+
+CASES = [
+    # -- elementwise / linear ------------------------------------------------
+    Case("actnorm-dense", ActNorm, _arr((1, 6))),
+    Case("actnorm-image", ActNorm, _arr((1, 2, 2, 3))),
+    Case("conv1x1-dense", Conv1x1, _arr((1, 6))),
+    Case("conv1x1-image", Conv1x1, _arr((1, 2, 2, 4))),
+    # -- couplings -----------------------------------------------------------
+    Case("affine-mlp", lambda: AffineCoupling(mlp_factory), _arr((1, 7)), perturb=0.3),
+    Case(
+        "affine-mlp-flip",
+        lambda: AffineCoupling(mlp_factory, flip=True),
+        _arr((1, 7)),
+        perturb=0.3,
+    ),
+    Case(
+        "affine-additive",
+        lambda: AffineCoupling(mlp_factory, additive=True),
+        _arr((1, 6)),
+        perturb=0.3,
+    ),
+    Case(
+        "affine-cnn",
+        lambda: AffineCoupling(cnn_factory),
+        _arr((1, 4, 4, 2)),
+        perturb=0.1,
+    ),
+    Case(
+        "affine-kernel",
+        lambda: AffineCoupling(mlp_factory, kernel_inverse=True, kernel_training=True),
+        _arr((1, 6)),
+        perturb=0.3,
+        logdet_jacobian=False,  # forward is the Pallas custom-VJP kernel
+    ),
+    Case(
+        "affine-conditional",
+        lambda: AffineCoupling(mlp_factory),
+        _arr((1, 6)),
+        cond=_arr((1, 4)),
+        perturb=0.3,
+    ),
+    # -- HINT recursion, depths 0-3 + the c < 4 identity leaf ----------------
+    Case("hint-depth0", lambda: HINTCoupling(mlp_factory, depth=0), _arr((1, 8))),
+    Case(
+        "hint-depth1",
+        lambda: HINTCoupling(mlp_factory, depth=1),
+        _arr((1, 8)),
+        perturb=0.2,
+    ),
+    Case(
+        "hint-depth2",
+        lambda: HINTCoupling(mlp_factory, depth=2),
+        _arr((1, 8)),
+        perturb=0.2,
+    ),
+    Case(
+        "hint-depth3",
+        lambda: HINTCoupling(mlp_factory, depth=3),
+        _arr((1, 10)),
+        perturb=0.2,
+    ),
+    Case(
+        "hint-tiny-identity",
+        lambda: HINTCoupling(mlp_factory, depth=2),
+        _arr((1, 3)),  # c < 4: the whole block is the identity leaf
+    ),
+    Case(
+        "hint-conditional",
+        lambda: HINTCoupling(mlp_factory, depth=2),
+        _arr((1, 8)),
+        cond=_arr((1, 5)),
+        perturb=0.2,
+    ),
+    Case(
+        "hint-kernel",
+        lambda: HINTCoupling(
+            mlp_factory, depth=2, kernel_inverse=True, kernel_training=True
+        ),
+        _arr((1, 8)),
+        perturb=0.2,
+    ),
+    # -- squeezes (parameter-free, volume-preserving) ------------------------
+    Case("haar", HaarSqueeze, _arr((1, 4, 4, 2))),
+    Case("squeeze", Squeeze, _arr((1, 4, 4, 2))),
+    # -- hyperbolic leapfrog on the pair state -------------------------------
+    Case(
+        "hyperbolic-dense",
+        lambda: HyperbolicLayer(alpha=0.3, conv=False),
+        _pair((1, 6)),
+        perturb=0.2,
+    ),
+    Case(
+        "hyperbolic-conv",
+        lambda: HyperbolicLayer(alpha=0.3, conv=True),
+        _pair((1, 2, 2, 2)),
+        perturb=0.2,
+    ),
+    # -- multiscale state wrappers -------------------------------------------
+    Case("split", Split, _state((1, 6), (1, 2))),
+    Case("pack", Pack, _arr((1, 5))),
+    Case("onfirst-actnorm", lambda: OnFirst(ActNorm()), _state((1, 4), (1, 2))),
+    # -- a nested chain as a layer (exercises InvertibleChain.fused_bwd).
+    # grad_mode here only shapes the inner chain's own forward (plain apply,
+    # so jacfwd can pierce it for the logdet check); the fused_bwd hook is
+    # mode-independent and the *outer* engine decides whether to use it.
+    Case(
+        "nested-chain",
+        lambda: InvertibleChain(
+            [ActNorm(), AffineCoupling(mlp_factory)], grad_mode="autodiff"
+        ),
+        _arr((1, 6)),
+        perturb=0.2,
+    ),
+]
+
+CASES_BY_NAME = {c.name: c for c in CASES}
+
+
+# ---------------------------------------------------------------------------
+# flow builders for the chain-level checks (parity + fused engagement)
+# ---------------------------------------------------------------------------
+
+#: name -> (builder(grad_mode) -> chain, example-input factory)
+CHAIN_BUILDERS = {
+    "glow": (
+        lambda gm: build_glow(n_scales=2, k_steps=2, hidden=8, grad_mode=gm),
+        _arr((2, 8, 8, 3)),
+    ),
+    "realnvp": (
+        lambda gm: build_realnvp(depth=4, hidden=16, grad_mode=gm),
+        _arr((4, 6)),
+    ),
+    "chint": (
+        lambda gm: build_chint(depth=2, recursion=2, hidden=16, grad_mode=gm),
+        _arr((4, 8)),
+    ),
+    "hyperbolic": (
+        lambda gm: build_hyperbolic(depth=4, alpha=0.3, conv=False, grad_mode=gm),
+        _pair((2, 6)),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+
+def max_leaf_diff(a, b):
+    def diff(x, y):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact):
+            return 0.0  # integer buffers carry float0 cotangents
+        return float(jnp.max(jnp.abs(jnp.asarray(x) - jnp.asarray(y))))
+
+    d = jax.tree_util.tree_map(diff, a, b)
+    return max(jax.tree_util.tree_leaves(d) or [0.0])
+
+
+def check_roundtrip(layer, params, x, cond, tol=ROUNDTRIP_TOL):
+    y, ld = layer.forward(params, x, cond)
+    x2 = layer.inverse(params, y, cond)
+    fx, _ = ravel_pytree(x)
+    fx2, _ = ravel_pytree(x2)
+    err = float(jnp.max(jnp.abs(fx - fx2)))
+    assert err < tol, f"roundtrip error {err}"
+    b = jax.tree_util.tree_leaves(x)[0].shape[0]
+    assert ld.shape == (b,)
+    assert bool(jnp.all(jnp.isfinite(ld)))
+
+
+def check_logdet(layer, params, x, cond, tol=LOGDET_TOL):
+    """Layer logdet vs. the exact slogdet of the flattened-state Jacobian.
+
+    Only meaningful for batch-1 examples (the full Jacobian then *is* the
+    per-sample Jacobian); ``ravel_pytree`` makes it uniform across array
+    and tuple states.
+    """
+    fx, unravel = ravel_pytree(x)
+
+    def flat_fwd(v):
+        y, _ = layer.forward(params, unravel(v), cond)
+        fy, _ = ravel_pytree(y)
+        return fy
+
+    jac = jax.jacfwd(flat_fwd)(fx)
+    _, ref = np.linalg.slogdet(np.asarray(jac, np.float64))
+    _, ld = layer.forward(params, x, cond)
+    np.testing.assert_allclose(float(jnp.sum(ld)), ref, rtol=tol, atol=tol)
+
+
+def grad_modes_grads(case, rng, modes=("autodiff", "invertible", "coupled")):
+    """Gradients of one shared loss through the layer wrapped in a
+    single-layer chain under each grad mode: {mode: (gparams, gx, gcond)}."""
+    layer, params, x, cond = case.make(rng)
+    wz, _ = ravel_pytree(jax.tree_util.tree_map(jnp.ones_like, x))
+    wz = jax.random.normal(jax.random.fold_in(rng, 3), wz.shape)
+
+    out = {}
+    for mode in modes:
+        chain = InvertibleChain([layer], grad_mode=mode)
+
+        def loss(p, x_, c_):
+            z, ld = chain.forward((p,), x_, c_)
+            fz, _ = ravel_pytree(z)
+            return jnp.sum(fz * wz) - jnp.sum(ld)
+
+        argnums = (0, 1) if cond is None else (0, 1, 2)
+        out[mode] = jax.grad(loss, argnums=argnums, allow_int=True)(params, x, cond)
+    return out
+
+
+class CountingNet:
+    """Conditioner wrapper whose apply() bumps a counter on every trace —
+    the probe for how many times the backward evaluates each conditioner."""
+
+    def __init__(self, inner, counter):
+        self.inner = inner
+        self.counter = counter
+
+    def init(self, rng, d_in, d_cond=0):
+        return self.inner.init(rng, d_in, d_cond)
+
+    def apply(self, params, x, cond=None):
+        self.counter[0] += 1
+        return self.inner.apply(params, x, cond)
+
+
+def counting_factory(counter, hidden=8):
+    return lambda d_out: CountingNet(CouplingMLP(d_out, hidden=hidden, depth=1), counter)
+
+
+def instrument_fused(chain):
+    """Wrap every layer's ``fused_bwd`` with a per-layer call counter.
+
+    The counters prove the coupled engine dispatched the fused hook for each
+    layer (exactly one trace per backward) — i.e. no layer silently fell
+    back to the generic invert-then-vjp step.
+    """
+    counts = [0] * len(chain.layers)
+
+    def wrap(i, orig):
+        def counted(*args, **kw):
+            counts[i] += 1
+            return orig(*args, **kw)
+
+        return counted
+
+    for i, layer in enumerate(chain.layers):
+        orig = getattr(layer, "fused_bwd", None)
+        assert orig is not None, f"layer {i} ({layer!r}) lacks fused_bwd"
+        layer.fused_bwd = wrap(i, orig)
+    return counts
+
+
+def count_cross_nets(params) -> int:
+    """Number of cross-coupling conditioners in a HINT params tree."""
+    n = 0
+    if isinstance(params, dict):
+        if "cross" in params:
+            n += 1
+        for v in params.values():
+            n += count_cross_nets(v)
+    elif isinstance(params, (list, tuple)):
+        for v in params:
+            n += count_cross_nets(v)
+    return n

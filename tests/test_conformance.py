@@ -1,0 +1,177 @@
+"""Registry-driven conformance suite over the whole invertible-layer zoo.
+
+The registry and check implementations live in ``tests/conformance.py``;
+this module is the pytest surface:
+
+* per-layer: round-trip, logdet-vs-Jacobian, 3-way gradient parity;
+* per-builder (glow / realnvp / chint / hyperbolic): gradient parity across
+  all grad modes AND the fused-engagement probe — every layer's ``fused_bwd``
+  fires exactly once per coupled backward, so nothing falls back to the
+  generic invert-then-vjp step;
+* conditioner-eval counts: the coupled backward evaluates each coupling
+  conditioner once (vs twice for the generic reversible backward).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conformance import (
+    CASES,
+    CHAIN_BUILDERS,
+    GRAD_PARITY_TOL,
+    CountingNet,
+    check_logdet,
+    check_roundtrip,
+    count_cross_nets,
+    counting_factory,
+    grad_modes_grads,
+    instrument_fused,
+    max_leaf_diff,
+    perturb,
+)
+from repro.core import HINTCoupling, InvertibleChain, value_and_grad_nll
+
+RNG = jax.random.PRNGKey(20260728)
+
+_case_ids = [c.name for c in CASES]
+
+
+@pytest.mark.parametrize("case", CASES, ids=_case_ids)
+def test_roundtrip(case):
+    layer, params, x, cond = case.make(RNG)
+    check_roundtrip(layer, params, x, cond)
+
+
+@pytest.mark.parametrize(
+    "case", [c for c in CASES if c.logdet_jacobian], ids=lambda c: c.name
+)
+def test_logdet_matches_jacobian(case):
+    layer, params, x, cond = case.make(RNG)
+    check_logdet(layer, params, x, cond)
+
+
+@pytest.mark.parametrize("case", CASES, ids=_case_ids)
+def test_grad_parity_all_modes(case):
+    """autodiff vs invertible vs coupled agree to <= 1e-4 on params, input
+    and conditioning cotangents — for every registered layer."""
+    grads = grad_modes_grads(case, RNG)
+    ad = grads["autodiff"]
+    for mode in ("invertible", "coupled"):
+        d = max_leaf_diff(grads[mode], ad)
+        assert d < GRAD_PARITY_TOL, f"{case.name}: {mode} vs autodiff diff {d}"
+
+
+# ---------------------------------------------------------------------------
+# chain-level: the flow builders
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(CHAIN_BUILDERS), ids=str)
+def test_builder_grad_parity(name):
+    build, example = CHAIN_BUILDERS[name]
+    x = example(RNG)
+    chain_ad = build("autodiff")
+    params = chain_ad.init(RNG, x)
+    # 0.05 keeps the ill-conditioning of deep f32 reconstruction bounded;
+    # past ~0.1 the *paper's own* invertible mode drifts from plain AD by
+    # >1e-1 (exp-scale compounding), so larger scales test conditioning,
+    # not engine correctness.
+    params = perturb(params, jax.random.fold_in(RNG, 5), 0.05)
+    l_ad, g_ad = value_and_grad_nll(chain_ad.forward, params, x)
+    for mode in ("invertible", "coupled"):
+        l_m, g_m = value_and_grad_nll(build(mode).forward, params, x)
+        assert abs(float(l_m - l_ad)) < 1e-5, (name, mode)
+        d = max_leaf_diff(g_m, g_ad)
+        assert d < GRAD_PARITY_TOL, f"{name}: {mode} vs autodiff diff {d}"
+
+
+@pytest.mark.parametrize("name", sorted(CHAIN_BUILDERS), ids=str)
+def test_builder_fused_path_engages(name):
+    """Under grad_mode="coupled", EVERY layer of every builder chain takes
+    its fused_bwd hook exactly once per backward — zero generic fallbacks."""
+    build, example = CHAIN_BUILDERS[name]
+    x = example(RNG)
+    chain = build("coupled")
+    params = chain.init(RNG, x)
+    counts = instrument_fused(chain)
+    value_and_grad_nll(chain.forward, params, x)
+    assert counts == [1] * len(chain.layers), (
+        f"{name}: fused_bwd calls per layer = {counts}; "
+        "a zero means that layer fell back to the generic backward"
+    )
+
+
+def test_nested_chain_fused_path_engages():
+    """A chain nested inside a coupled chain dispatches the *inner* layers'
+    fused hooks too (InvertibleChain.fused_bwd reuses the shared walk)."""
+    from conformance import mlp_factory
+    from repro.core import ActNorm, AffineCoupling
+
+    inner = InvertibleChain([ActNorm(), AffineCoupling(mlp_factory)])
+    outer = InvertibleChain([ActNorm(), inner], grad_mode="coupled")
+    x = jax.random.normal(RNG, (2, 6))
+    params = outer.init(RNG, x)
+    outer_counts = instrument_fused(outer)
+    inner_counts = instrument_fused(inner)
+    value_and_grad_nll(outer.forward, params, x)
+    assert outer_counts == [1, 1]
+    assert inner_counts == [1, 1]
+
+
+# ---------------------------------------------------------------------------
+# conditioner-eval-count probes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,calls_per_node", [("invertible", 3), ("coupled", 2)])
+def test_hint_conditioner_eval_count(mode, calls_per_node):
+    """HINT's recursive fused backward evaluates each cross-coupling
+    conditioner ONCE (1 forward + 1 backward trace per node); the generic
+    invert-then-vjp backward needs two backward evaluations (3 total)."""
+    counter = [0]
+    layer = HINTCoupling(counting_factory(counter), depth=2)
+    chain = InvertibleChain([layer], grad_mode=mode)
+    x = jax.random.normal(RNG, (4, 8))
+    params = chain.init(RNG, x)
+    n_nodes = count_cross_nets(params)
+    assert n_nodes == 3  # c=8, depth=2: root + two c=4 children
+    counter[0] = 0
+    value_and_grad_nll(chain.forward, params, x)
+    assert counter[0] == calls_per_node * n_nodes, (mode, counter[0], n_nodes)
+
+
+def test_glow_conditioner_eval_count():
+    """End-to-end GLOW under the coupled engine: each coupling conditioner is
+    evaluated exactly twice per training step (1 forward + 1 backward)."""
+    from repro.core import (
+        ActNorm,
+        AffineCoupling,
+        Conv1x1,
+        HaarSqueeze,
+        OnFirst,
+        Pack,
+        Split,
+    )
+    from repro.nn.nets import CouplingCNN
+
+    counter = [0]
+    factory = lambda c_out: CountingNet(CouplingCNN(c_out, hidden=8), counter)
+    layers = [Pack()]
+    n_couplings = 0
+    for scale in range(2):
+        layers.append(OnFirst(HaarSqueeze()))
+        for _ in range(2):
+            layers.append(OnFirst(ActNorm()))
+            layers.append(OnFirst(Conv1x1()))
+            layers.append(OnFirst(AffineCoupling(factory)))
+            n_couplings += 1
+        if scale != 1:
+            layers.append(Split())
+    chain = InvertibleChain(layers, grad_mode="coupled")
+    x = jax.random.normal(RNG, (2, 8, 8, 3))
+    params = chain.init(RNG, x)
+    counter[0] = 0
+    value_and_grad_nll(chain.forward, params, x)
+    assert counter[0] == 2 * n_couplings, (counter[0], n_couplings)

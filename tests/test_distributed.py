@@ -1,6 +1,7 @@
 """Multi-device tests, each in a subprocess with 8 host devices (the main
 test process must keep seeing 1 device — see dryrun.py notes)."""
 
+import importlib.util
 import os
 import subprocess
 import sys
@@ -9,6 +10,16 @@ import textwrap
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# These tests exercise the sharding/pipeline subsystem (`repro.dist`), which
+# is not part of every build.  The multi-device mesh itself needs no gating:
+# the subprocess always forges 8 CPU host devices via
+# --xla_force_host_platform_device_count + JAX_PLATFORMS=cpu, independent of
+# the parent's backend or device count.
+pytestmark = pytest.mark.skipif(
+    importlib.util.find_spec("repro.dist") is None,
+    reason="repro.dist (sharding/pipeline subsystem) not present in this build",
+)
 
 
 def _run(code: str, devices: int = 8):

@@ -103,6 +103,35 @@ def test_coupling_custom_vjp_matches_autodiff():
         )
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m", [300, 96, 28])
+def test_coupling_kernel_dtype_ragged_parity(m, dtype):
+    """Forward/backward coupling kernels at non-power-of-two spatial extents
+    in both dtypes, against the oracle, with per-dtype tolerances."""
+    shape = (2, m, 5)
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], shape, dtype)
+    raw = jax.random.normal(ks[1], shape, dtype)
+    t = jax.random.normal(ks[2], shape, dtype)
+    gy = jax.random.normal(ks[3], shape, dtype)
+    gld = jax.random.normal(ks[4], (shape[0],))
+    bm = pick_block_m(m)
+    assert m % bm == 0
+    y, ld = fused_coupling_fwd(x, raw, t, block_m=bm)
+    y_ref, ld_ref = coupling_fwd_ref(x, raw, t)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **_tol(dtype)
+    )
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ld_ref), rtol=1e-3, atol=1e-3)
+    out_k = fused_coupling_bwd(y, raw, t, gy, gld, block_m=bm)
+    out_ref = coupling_bwd_ref(y, raw, t, gy, gld)
+    for a, b, name in zip(out_k, out_ref, ("x", "gx", "graw", "gt")):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            **_tol(dtype), err_msg=f"{name} (m={m}, {dtype.__name__})",
+        )
+
+
 def test_pick_block_m():
     assert pick_block_m(512) == 256
     assert pick_block_m(300) == 150  # largest divisor <= 256
@@ -191,6 +220,38 @@ def test_conv1x1_custom_vjp_matches_autodiff(m):
     for a, b_, name in zip(g_k, g_ref, ("gx", "gw")):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-4, err_msg=name
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m", [300, 96, 28])
+def test_conv1x1_kernel_dtype_ragged_parity(m, dtype):
+    """conv1x1_mm forward + VJP at non-power-of-two extents in both dtypes;
+    the (C, C) gW accumulator stays f32 so bf16 activations keep a tight
+    weight-gradient tolerance."""
+    b, c = 2, 8
+    x = jax.random.normal(RNG, (b, m, c), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (c, c), jnp.float32)
+    gy = jax.random.normal(jax.random.PRNGKey(2), (b, m, c), dtype)
+    y = invertible_conv1x1(x, w)
+    y_ref = conv1x1_mm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **_tol(dtype)
+    )
+
+    def loss(mm):
+        return jax.grad(
+            lambda x_, w_: jnp.sum(mm(x_, w_).astype(jnp.float32) * gy.astype(jnp.float32)),
+            argnums=(0, 1),
+        )
+
+    g_k = loss(invertible_conv1x1)(x, w)
+    g_ref = loss(conv1x1_mm_ref)(x, w)
+    gw_tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+    for a, b_, name, tol in zip(g_k, g_ref, ("gx", "gw"), (_tol(dtype), gw_tol)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b_, np.float32), **tol,
+            err_msg=f"{name} (m={m}, {dtype.__name__})",
         )
 
 
