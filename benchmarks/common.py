@@ -24,6 +24,34 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def compiled_memory(compiled) -> dict:
+    """Device-memory footprint of an already-compiled executable
+    (``jax.jit(f).lower(*args).compile()`` — compile once, reuse the object
+    for both timing and this analysis).
+
+    ``temp_bytes`` (XLA temporaries — the live-activation peak, the paper's
+    Fig. 2 axis) plus argument/output buffer sizes; ``peak_bytes`` is their
+    sum — what the device must hold while the step runs.  Returns ``{}``
+    where XLA offers no memory analysis for the backend.
+    """
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        return {
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "peak_bytes": int(
+                ma.temp_size_in_bytes
+                + ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+            ),
+        }
+    except Exception:
+        return {}
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 

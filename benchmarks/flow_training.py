@@ -1,42 +1,177 @@
-"""Flow-training throughput (the paper's native workload): GLOW on synthetic
-images, sweeping the gradient engine — ``invertible`` (the paper's
-recompute-by-inversion VJP), ``coupled`` (fused reversible backward through
-the Pallas coupling/conv1x1 kernels; EXPERIMENTS.md §Perf/H1) and
-``autodiff`` (the normflows-style plain-AD baseline).  The compute cost of
-the memory-for-compute trade measured directly, per grad mode."""
+"""Flow-training throughput + memory (the paper's native workload): GLOW on
+synthetic 32px images, sweeping the gradient engine:
+
+* ``autodiff``   — plain AD through the generic unrolled chain: the
+  normflows-style external baseline, exactly as PR 1's committed JSON
+  measured it.
+* ``invertible`` — the paper's recompute-by-inversion VJP on the same chain.
+* ``coupled``    — the production fast path: scan-compiled GLOW through the
+  fused flow-step megakernel, backward strategy resolved per backend
+  (reversible megakernel reverse scan off-CPU; stored-activation transpose
+  on CPU — EXPERIMENTS.md §Perf/H2).
+* ``autodiff_scanned`` — informational: plain AD on the same scanned fused
+  topology as ``coupled``, isolating the fusion win from the engine choice.
+
+All modes are timed **interleaved** (round-robin across modes, median per
+mode) — this host's run-to-run noise is far larger than the effects under
+measurement, and interleaving cancels the drift.  Per mode the JSON records
+``imgs_per_s`` AND the compiled-executable memory footprint
+(``temp_size_in_bytes`` + argument/output sizes — the deterministic analogue
+of the paper's Fig. 2 measured-GPU-memory axis), so the coupled-vs-autodiff
+tradeoff is tracked per PR, plus trace+compile wall time of the scanned
+builder vs the unrolled chain at two depths (sub-linearity evidence).
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import time
 
-from benchmarks.common import emit, emit_json, time_fn
-from repro.core import build_glow, value_and_grad_nll
+import jax
+import numpy as np
+
+from benchmarks.common import compiled_memory, emit, emit_json
+from repro.core import build_glow, build_glow_scanned, value_and_grad_nll
 from repro.data import SyntheticImages
 
-GRAD_MODE_SWEEP = ("invertible", "coupled", "autodiff")
+GRAD_MODE_SWEEP = ("invertible", "coupled", "autodiff", "autodiff_scanned")
+
+#: the committed workload: 32px RGB, batch 8, 2 scales x 4 steps, hidden 32
+WORKLOAD = dict(n_scales=2, k_steps=4, hidden=32)
+
+
+def _batch():
+    return SyntheticImages(size=32, batch=8, seed=0).batch_at(0)
+
+
+def _build_mode(mode: str, **cfg):
+    if mode in ("autodiff", "invertible"):
+        return build_glow(grad_mode=mode, **cfg)
+    if mode == "autodiff_scanned":
+        return build_glow_scanned(grad_mode="autodiff", **cfg)
+    if mode == "coupled":
+        return build_glow_scanned(grad_mode="coupled", **cfg)
+    raise ValueError(mode)
+
+
+def _prepare(mode: str, x, **overrides):
+    cfg = {**WORKLOAD, **overrides}
+    flow = _build_mode(mode, **cfg)
+    params = flow.init(jax.random.PRNGKey(0), x)
+    # AOT-compile once; the executable serves warmup, timing AND the
+    # memory_analysis read (no second lower+compile)
+    f = jax.jit(
+        lambda p, xx: value_and_grad_nll(flow.forward, p, xx)
+    ).lower(params, x).compile()
+    jax.block_until_ready(f(params, x))  # warm
+    return f, params
+
+
+def measure_modes(modes, x=None, rounds: int = 25, **overrides) -> dict:
+    """Interleaved throughput/memory sweep; reused by the CI regression gate.
+
+    The reported time is the **lower quartile** of the interleaved samples:
+    contention noise on a shared host is strictly one-sided (it only ever
+    makes a run slower), so low-order statistics recover the machine's true
+    per-step cost where medians flip sign run-to-run (timeit's min-rule;
+    p25 trades a little of min's optimism for stability).
+    """
+    x = _batch() if x is None else x
+    prepared = {m: _prepare(m, x, **overrides) for m in modes}
+    samples = {m: [] for m in modes}
+    for _ in range(rounds):
+        for m, (f, p) in prepared.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(p, x))
+            samples[m].append(time.perf_counter() - t0)
+    rows = {}
+    for m, (f, p) in prepared.items():
+        us = float(np.percentile(samples[m], 25) * 1e6)
+        loss, _ = f(p, x)
+        rows[m] = {
+            "us_per_step": us,
+            "us_per_step_median": float(np.median(samples[m]) * 1e6),
+            "imgs_per_s": x.shape[0] / (us / 1e6),
+            "nll": float(loss),
+        }
+        rows[m].update(compiled_memory(f))
+    return rows
+
+
+def _trace_compile_s(build, x) -> float:
+    flow = build()
+    params = flow.init(jax.random.PRNGKey(0), x)
+    t0 = time.perf_counter()
+    jax.jit(lambda p, xx: value_and_grad_nll(flow.forward, p, xx)).lower(
+        params, x
+    ).compile()
+    return time.perf_counter() - t0
+
+
+def compile_scaling(x=None, depths=(2, 8)) -> dict:
+    """Trace+compile wall time of the unrolled chain vs the scanned builder
+    at two depths: the scanned growth must stay well under the unrolled one
+    (one traced step body per scale vs per-layer Python tracing).  The
+    scanned builder is measured at ``unroll=1`` — the O(1)-HLO configuration
+    that is its default on TPU (on CPU the runtime default trades HLO
+    size back for loop-free conv gradients; tracing stays O(1) either way)."""
+    x = _batch() if x is None else x
+    out = {}
+    builders = (
+        ("unrolled", lambda k: build_glow(
+            n_scales=2, k_steps=k, hidden=16, grad_mode="coupled")),
+        ("scanned", lambda k: build_glow_scanned(
+            n_scales=2, k_steps=k, hidden=16, grad_mode="coupled", unroll=1)),
+    )
+    for name, build in builders:
+        per_depth = {}
+        for k in depths:
+            s = _trace_compile_s(lambda: build(k), x)
+            per_depth[f"k{k}"] = s
+            emit(f"glow_compile/{name}/k{k}", s * 1e6, "trace+compile")
+        per_depth["growth"] = per_depth[f"k{depths[-1]}"] / max(
+            per_depth[f"k{depths[0]}"], 1e-9
+        )
+        out[name] = per_depth
+    emit(
+        "glow_compile/summary", 0.0,
+        f"depth x{depths[-1] // depths[0]}: unrolled {out['unrolled']['growth']:.2f}x"
+        f" vs scanned {out['scanned']['growth']:.2f}x",
+    )
+    return out
 
 
 def run():
-    data = SyntheticImages(size=32, batch=8, seed=0)
-    x = data.batch_at(0)
-    rows = {}
-    for mode in GRAD_MODE_SWEEP:
-        flow = build_glow(n_scales=2, k_steps=4, hidden=32, grad_mode=mode)
-        params = flow.init(jax.random.PRNGKey(0), x)
-        f = jax.jit(lambda p, xx: value_and_grad_nll(flow.forward, p, xx))
-        us = time_fn(f, params, x)
-        loss, _ = f(params, x)
-        imgs_s = x.shape[0] / (us / 1e6)
-        rows[mode] = {"us_per_step": us, "imgs_per_s": imgs_s, "nll": float(loss)}
-        emit(f"glow_train_32px/{mode}", us, f"imgs_per_s={imgs_s:.1f} nll={float(loss):.3f}")
-    # all three engines must optimize the same objective
+    x = _batch()
+    rows = measure_modes(GRAD_MODE_SWEEP, x)
+    for mode, row in rows.items():
+        emit(
+            f"glow_train_32px/{mode}", row["us_per_step"],
+            f"imgs_per_s={row['imgs_per_s']:.1f}"
+            f" peak_bytes={row.get('peak_bytes')}"
+            f" nll={row['nll']:.3f}",
+        )
+    # all engines must optimize the same objective
     nlls = [r["nll"] for r in rows.values()]
     spread = max(nlls) - min(nlls)
     emit("glow_train_32px/nll_spread", 0.0, f"max_loss_spread={spread:.2e}")
+    emit(
+        "glow_train_32px/coupled_vs_autodiff", 0.0,
+        f"throughput_ratio={rows['coupled']['imgs_per_s'] / rows['autodiff']['imgs_per_s']:.3f}"
+        f" mem_ratio={rows['coupled'].get('peak_bytes', 0) / max(rows['autodiff'].get('peak_bytes', 1), 1):.3f}",
+    )
     emit_json(
         "flow_training",
-        {"workload": "glow_train_32px", "grad_modes": rows, "nll_spread": spread},
+        {
+            "workload": "glow_train_32px",
+            "backend": jax.default_backend(),
+            "builders": {
+                "autodiff": "glow_unrolled", "invertible": "glow_unrolled",
+                "coupled": "glow_scanned", "autodiff_scanned": "glow_scanned",
+            },
+            "grad_modes": rows,
+            "nll_spread": spread,
+            "compile_scaling": compile_scaling(x),
+        },
     )
 
 

@@ -13,7 +13,7 @@ import argparse
 import jax
 
 from repro.config import TrainConfig
-from repro.core import build_glow, nll_bits_per_dim
+from repro.core import build_glow, build_glow_scanned, nll_bits_per_dim
 from repro.data import SyntheticImages
 from repro.train import train_flow
 
@@ -25,10 +25,16 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--grad-mode", default="invertible",
                     choices=["invertible", "coupled", "autodiff"])
+    ap.add_argument(
+        "--scanned", action="store_true",
+        help="scan-compiled GLOW through the fused flow-step megakernel"
+             " (O(1)-in-depth tracing; the coupled fast path — §Perf/H2)",
+    )
     ap.add_argument("--ckpt", default="checkpoints/glow")
     args = ap.parse_args()
 
-    flow = build_glow(n_scales=2, k_steps=4, hidden=32, grad_mode=args.grad_mode)
+    build = build_glow_scanned if args.scanned else build_glow
+    flow = build(n_scales=2, k_steps=4, hidden=32, grad_mode=args.grad_mode)
     data = SyntheticImages(size=args.size, batch=args.batch, seed=0)
     tcfg = TrainConfig(
         steps=args.steps, lr=1e-3, warmup_steps=10,

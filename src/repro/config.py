@@ -65,7 +65,7 @@ class SSMConfig:
     expand: int = 2
     head_dim: int = 64
     chunk: int = 128  # chunk length for the blocked scan
-    # rwkv6: 0 = per-token wkv scan (baseline); >0 = chunked (§Perf/H3)
+    # rwkv6: 0 = per-token wkv scan (baseline); >0 = chunked (§Perf/H4)
     wkv_chunk: int = 0
 
     def d_inner(self, d_model: int) -> int:
@@ -125,7 +125,7 @@ class ModelConfig:
     tie_embeddings: bool = False
     ffn_kind: str = "swiglu"  # swiglu | gelu_mlp
     logit_softcap: float = 0.0
-    # sequence-parallel attention (§Perf/H6): shard the query sequence over
+    # sequence-parallel attention (§Perf/H7): shard the query sequence over
     # the model axis when head counts don't divide it (llava: 56q/8kv vs 16)
     attn_seq_shard: bool = False
 

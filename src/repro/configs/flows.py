@@ -10,7 +10,7 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class FlowConfig:
     name: str
-    kind: str  # realnvp | glow | chint | hyperbolic
+    kind: str  # realnvp | glow | glow_scanned | chint | hyperbolic
     depth: int = 8
     hidden: int = 64
     n_scales: int = 3
@@ -24,9 +24,20 @@ class FlowConfig:
 GLOW_PAPER = FlowConfig(name="glow-paper", kind="glow", n_scales=3, k_steps=8, hidden=64)
 # the exact setting of the paper's Fig. 1/2: RGB images, batch 8
 GLOW_FIG1 = FlowConfig(name="glow-fig1", kind="glow", n_scales=3, k_steps=8, hidden=64)
-# the Fig. 1 net on the fused kernel-backward training path (§Perf/H1)
+# the Fig. 1 net on the fused kernel-backward training path (§Perf/H1).
+# Per-layer Python unroll: HLO size / compile time grow with k_steps.
 GLOW_COUPLED = FlowConfig(
     name="glow-coupled", kind="glow", n_scales=3, k_steps=8, hidden=64,
+    grad_mode="coupled",
+)
+# the production fast path (§Perf/H2): scan-compiled homogeneous flow-step
+# stacks through the fused megakernel — same density model as GLOW_COUPLED,
+# but trace/compile time is O(1) in k_steps and each step is one fused
+# forward launch + two fused backward launches around the conditioner VJP.
+# Prefer GLOW_SCANNED for training; GLOW_COUPLED remains the unrolled
+# reference (heterogeneous chains, arbitrary layer mixes).
+GLOW_SCANNED = FlowConfig(
+    name="glow-scanned", kind="glow_scanned", n_scales=3, k_steps=8, hidden=64,
     grad_mode="coupled",
 )
 REALNVP_2D = FlowConfig(name="realnvp-2d", kind="realnvp", depth=8, hidden=128)
@@ -44,11 +55,21 @@ HYPERBOLIC_DEEP = FlowConfig(
 
 
 def build_flow(cfg: FlowConfig, grad_mode: str | None = None):
-    from repro.core import build_chint, build_glow, build_hyperbolic, build_realnvp
+    from repro.core import (
+        build_chint,
+        build_glow,
+        build_glow_scanned,
+        build_hyperbolic,
+        build_realnvp,
+    )
 
     gm = grad_mode or cfg.grad_mode
     if cfg.kind == "glow":
         return build_glow(
+            n_scales=cfg.n_scales, k_steps=cfg.k_steps, hidden=cfg.hidden, grad_mode=gm
+        )
+    if cfg.kind == "glow_scanned":
+        return build_glow_scanned(
             n_scales=cfg.n_scales, k_steps=cfg.k_steps, hidden=cfg.hidden, grad_mode=gm
         )
     if cfg.kind == "realnvp":

@@ -23,7 +23,7 @@ CONFIG = ModelConfig(
     d_ff=14336,
     vocab_size=32000,
     attention=AttentionConfig(n_heads=32, n_kv_heads=32, head_dim=112),
-    ssm=SSMConfig(kind="mamba2", d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),  # chunk tuned in §Perf/H9
+    ssm=SSMConfig(kind="mamba2", d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),  # chunk tuned in §Perf/H10
     hybrid_attn_every=6,
 )
 

@@ -18,6 +18,7 @@ from repro.core.distributions import (
     std_normal_sample,
 )
 from repro.core.glow import build_glow
+from repro.core.glow_scan import GlowStepStack, build_glow_scanned
 from repro.core.haar import HaarSqueeze, Squeeze
 from repro.core.hint import HINTCoupling
 from repro.core.hyperbolic import HyperbolicLayer, build_hyperbolic
@@ -27,10 +28,11 @@ from repro.core.types import Invertible
 
 __all__ = [
     "ActNorm", "AffineCoupling", "ConditionalFlow", "Conv1x1", "GRAD_MODES",
+    "GlowStepStack",
     "HINTCoupling", "HaarSqueeze", "HyperbolicLayer", "Invertible",
     "InvertibleChain", "OnFirst", "Pack", "Split", "Squeeze", "SummaryMLP",
-    "amortized_vi_loss", "build_chint", "build_glow", "build_hyperbolic",
-    "build_realnvp",
+    "amortized_vi_loss", "build_chint", "build_glow", "build_glow_scanned",
+    "build_hyperbolic", "build_realnvp",
     "flatten_state", "make_chain_apply", "make_scan_apply",
     "nll_bits_per_dim", "nll_loss", "std_normal_logpdf", "std_normal_sample",
     "value_and_grad_nll",

@@ -185,6 +185,37 @@ def make_chain_apply(
 # ---------------------------------------------------------------------------
 
 
+def scan_backward(step_bwd, stacked, y, gy, gld, extra=None, unroll: int = 1):
+    """Fused reversible reverse-scan from the *output* side.
+
+    The scan-engine twin of :func:`chain_backward`: one ``lax.scan`` (reverse)
+    whose body is the layer's fused ``step_bwd(p_i, y, gy, gld, extra, i) ->
+    (x, gx, gparams_i, gextra_i)``.  Returns ``(x, gx, gstacked, gextra)`` —
+    the reconstructed stack input, its cotangent, the layer-stacked parameter
+    cotangents and the accumulated shared-pytree cotangent.  Shared by
+    ``make_scan_apply(grad_mode="coupled")`` and by the scanned-GLOW
+    ``GlowStepStack.fused_bwd`` hook (so a scanned stack nested inside a
+    coupled chain keeps its megakernel backward AND its O(1)-in-depth HLO).
+    """
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    gld = gld.astype(jnp.float32)
+    gextra0 = jax.tree_util.tree_map(lambda v: jnp.zeros(v.shape, v.dtype), extra)
+
+    def body(carry, sp):
+        yc, gyc, ge = carry
+        p, i = sp
+        # fused: one evaluation per unit reconstructs AND differentiates
+        x, gx, gp, ge_i = step_bwd(p, yc, gyc, gld, extra, i)
+        gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
+        return (x, gx, _tree_add(ge, ge_i)), gp
+
+    (x0, gx, gextra), gstacked = lax.scan(
+        body, (y, gy, gextra0), (stacked, ids), reverse=True, unroll=unroll
+    )
+    return x0, gx, gstacked, gextra
+
+
 def make_scan_apply(
     step_fwd: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, jax.Array]],
     step_inv: Callable[[PyTree, PyTree, PyTree, jax.Array], PyTree],
@@ -258,32 +289,28 @@ def make_scan_apply(
     def apply_bwd(res, cts):
         stacked, y, extra = res
         gy, gld = cts
+        if grad_mode == "coupled":
+            _x0, gx, gstacked, gextra = scan_backward(
+                step_bwd, stacked, y, gy, gld, extra, unroll=unroll
+            )
+            return gstacked, gx, gextra
         ids = _layer_ids(stacked)
         gld = gld.astype(jnp.float32)
         gextra0 = jax.tree_util.tree_map(lambda v: jnp.zeros(v.shape, v.dtype), extra)
 
-        if grad_mode == "coupled":
-            def body(carry, sp):
-                yc, gyc, ge = carry
-                p, i = sp
-                # fused: one evaluation per unit reconstructs AND differentiates
-                x, gx, gp, ge_i = step_bwd(p, yc, gyc, gld, extra, i)
-                gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
-                return (x, gx, _tree_add(ge, ge_i)), gp
-        else:
-            def body(carry, sp):
-                yc, gyc, ge = carry
-                p, i = sp
-                # reconstruct the layer input from the layer output
-                x = _stop(step_inv(p, yc, extra, i))
-                y2, vjp = jax.vjp(
-                    lambda p_, x_, e_: step_fwd(p_, x_, e_, i), p, x, extra
-                )
-                gyc = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gyc, y2[0])
-                gp, gx, ge_i = vjp((gyc, gld.astype(y2[1].dtype)))
-                # keep the carry dtype stable across iterations
-                gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
-                return (x, gx, _tree_add(ge, ge_i)), gp
+        def body(carry, sp):
+            yc, gyc, ge = carry
+            p, i = sp
+            # reconstruct the layer input from the layer output
+            x = _stop(step_inv(p, yc, extra, i))
+            y2, vjp = jax.vjp(
+                lambda p_, x_, e_: step_fwd(p_, x_, e_, i), p, x, extra
+            )
+            gyc = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gyc, y2[0])
+            gp, gx, ge_i = vjp((gyc, gld.astype(y2[1].dtype)))
+            # keep the carry dtype stable across iterations
+            gx = jax.tree_util.tree_map(lambda g, v: g.astype(v.dtype), gx, x)
+            return (x, gx, _tree_add(ge, ge_i)), gp
 
         (x0, gx, gextra), gstacked = lax.scan(
             body, (y, gy, gextra0), (stacked, ids), reverse=True, unroll=unroll

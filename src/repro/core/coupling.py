@@ -122,24 +122,22 @@ class AffineCoupling(Invertible):
         return self._merge(xa, yb)
 
     def _kernel_fwd(self, xa, raw, t):
-        from repro.kernels.common import block_m_for, flatten_bmc
+        from repro.kernels.common import flatten_bmc
         from repro.kernels.coupling.ops import fused_coupling_fwd
 
         shape = xa.shape
         ya, ld = fused_coupling_fwd(
-            flatten_bmc(xa), flatten_bmc(raw), flatten_bmc(t),
-            clamp=self.clamp, block_m=block_m_for(xa),
+            flatten_bmc(xa), flatten_bmc(raw), flatten_bmc(t), clamp=self.clamp,
         )
         return ya.reshape(shape), ld
 
     def _kernel_inv(self, ya, raw, t):
-        from repro.kernels.common import block_m_for, flatten_bmc
+        from repro.kernels.common import flatten_bmc
         from repro.kernels.coupling.ops import fused_coupling_inv
 
         shape = ya.shape
         xa = fused_coupling_inv(
-            flatten_bmc(ya), flatten_bmc(raw), flatten_bmc(t),
-            clamp=self.clamp, block_m=block_m_for(ya),
+            flatten_bmc(ya), flatten_bmc(raw), flatten_bmc(t), clamp=self.clamp,
         )
         return xa.reshape(shape)
 
@@ -179,7 +177,7 @@ class AffineCoupling(Invertible):
         """Single-pass affine backward on the (B, M, C) view: the Pallas
         kernel when ``kernel_training``, else its jnp oracle (one source of
         truth for the math either way)."""
-        from repro.kernels.common import block_m_for, flatten_bmc
+        from repro.kernels.common import flatten_bmc
         from repro.kernels.coupling.ops import fused_coupling_bwd
         from repro.kernels.coupling.ref import coupling_bwd_ref
 
@@ -187,7 +185,7 @@ class AffineCoupling(Invertible):
         if self.kernel_training:
             xa, gxa, graw, gt = fused_coupling_bwd(
                 flatten_bmc(ya), flatten_bmc(raw), flatten_bmc(t), flatten_bmc(gya),
-                gld, clamp=self.clamp, block_m=block_m_for(ya),
+                gld, clamp=self.clamp,
             )
         else:
             xa, gxa, graw, gt = coupling_bwd_ref(

@@ -3,10 +3,17 @@
 Each kernel package provides:
   * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
     VMEM tiling (TPU is the TARGET; validated with ``interpret=True`` on CPU)
-  * ``ops.py``    — the jit'd public wrapper (auto-selects interpret mode off-TPU)
+  * ``ops.py``    — the public wrapper: backend-aware dispatch via
+    ``kernels.common.kernel_path()`` (compiled Pallas + autotuned ``block_m``
+    on TPU, the fused jnp oracle off-TPU, interpret only when forced;
+    the coupling/conv1x1/flowstep wrappers carry the full dispatch, the
+    attention/ssd/rwkv wrappers resolve the interpret flag per backend)
   * ``ref.py``    — the pure-jnp oracle the kernel is tested against
 
 Kernels:
+  * ``flowstep``  — fused GLOW flow-step megakernel: actnorm + conv1x1 +
+    coupling in one VMEM residency per block (fwd), plus the fused
+    conv/actnorm backward spine (§Perf/H2)
   * ``coupling``  — fused affine-coupling transform + logdet (flow hot spot)
   * ``conv1x1``   — invertible 1x1 convolution channel matmul (flow hot spot)
   * ``attention`` — flash attention forward (tiled online softmax, GQA)
@@ -14,6 +21,6 @@ Kernels:
   * ``rwkv``      — RWKV6 wkv recurrence with VMEM-resident state
 """
 
-from repro.kernels.common import use_interpret
+from repro.kernels.common import kernel_path, resolve_interpret, use_interpret
 
-__all__ = ["use_interpret"]
+__all__ = ["kernel_path", "resolve_interpret", "use_interpret"]

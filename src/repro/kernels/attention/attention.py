@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -77,7 +79,7 @@ def _flash_kernel(
 )
 def flash_attention(
     q, k, v, *, causal: bool = True, block_q: int = 128, block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
     b, hq, sq, d = q.shape
@@ -114,5 +116,5 @@ def flash_attention(
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

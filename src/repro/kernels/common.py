@@ -1,13 +1,126 @@
-"""Shared kernel utilities."""
+"""Shared kernel utilities + the backend-aware kernel configuration layer.
+
+Every Pallas wrapper in ``repro.kernels`` routes its execution decision
+through this module instead of hardcoding ``interpret=True``:
+
+* ``kernel_path()`` — how the *flow hot-path* wrappers (coupling, conv1x1,
+  flowstep) should execute:
+
+  - ``"compiled"``  on TPU: real ``pallas_call`` lowering (the perf path;
+    see ``COMPILED_BACKENDS`` for why GPU is excluded for now).
+  - ``"reference"`` on CPU: the pure-jnp oracle, XLA-compiled.  Interpret-mode
+    Pallas executes the kernel body per grid step in emulation — it is a
+    *debugging* mode, not a perf path, and on CPU the jnp oracle is the same
+    math fused by XLA.  This is the fix for the silent-slow default that made
+    ``grad_mode="coupled"`` lose to plain autodiff (EXPERIMENTS.md §Perf/H2).
+  - ``"interpret"``  when forced: kernel bodies run under the Pallas
+    interpreter (kernel-correctness tests, CI smoke).
+
+  Override with ``REPRO_PALLAS_INTERPRET=1`` (force interpret) or ``=0``
+  (force compiled, even on CPU — will fail without a Pallas lowering).
+
+* ``resolve_interpret(interpret)`` — maps the ``interpret=None`` default of
+  the kernel entry points onto the same policy (compiled off-CPU, interpret
+  as the CPU fallback).
+
+The resolution is logged once per distinct outcome (a one-line breadcrumb so
+a slow run is never silently in emulation).
+
+Autotuning: ``tuned_block_m`` measures a small candidate set of legal
+``block_m`` tilings and persists the winner in a JSON cache keyed by
+``(op, shape, dtype, backend)`` so repeat runs skip tuning entirely.  On the
+interpret/reference paths (where timing the emulation is meaningless) it
+falls back to the deterministic divisor pick.
+"""
 
 from __future__ import annotations
 
+import json
+import logging
+import os
+import time
+from typing import Callable, Iterable, Optional, Sequence
+
 import jax
+
+_log = logging.getLogger("repro.kernels")
+
+#: backends whose Pallas lowering these kernels actually support.  TPU only:
+#: every kernel in this repo accumulates into revisited output blocks
+#: (logdet, gW, per-channel actnorm grads), which is only correct because
+#: the TPU grid iterates *sequentially* — on GPU (Triton) grid programs run
+#: in parallel and the same pattern is a data race, and several kernels use
+#: TPU-specific scratch shapes.  Widen this only together with a GPU kernel
+#: story; until then GPU hosts take the reference path like CPU.
+COMPILED_BACKENDS = ("tpu",)
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+_logged_keys: set = set()
+
+
+def _env_interpret() -> Optional[bool]:
+    raw = os.environ.get(INTERPRET_ENV)
+    if raw is None:
+        return None
+    return raw.strip().lower() in ("1", "true", "yes", "interpret")
+
+
+def kernel_path() -> str:
+    """Execution path for the flow hot-path wrappers.
+
+    ``"compiled"`` | ``"reference"`` | ``"interpret"`` — see module docstring.
+    Read per call (cheap), logged once per distinct resolution.
+    """
+    backend = jax.default_backend()
+    forced = _env_interpret()
+    if forced is True:
+        path, why = "interpret", f"{INTERPRET_ENV}=1"
+    elif forced is False:
+        path, why = "compiled", f"{INTERPRET_ENV}=0"
+    elif backend in COMPILED_BACKENDS:
+        path, why = "compiled", f"backend={backend}"
+    else:
+        path, why = "reference", f"backend={backend} (jnp oracle; interpret is debug-only)"
+    _log_once(("path", path, why), "pallas kernel path: %s (%s)", path, why)
+    return path
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret=None`` default for a raw ``pallas_call`` entry
+    point: compiled on TPU, interpret as the off-TPU fallback; the
+    ``REPRO_PALLAS_INTERPRET`` override wins either way."""
+    if interpret is not None:
+        return interpret
+    forced = _env_interpret()
+    if forced is not None:
+        resolved = forced
+        why = f"{INTERPRET_ENV}={int(forced)}"
+    else:
+        resolved = jax.default_backend() not in COMPILED_BACKENDS
+        why = f"backend={jax.default_backend()}"
+    _log_once(
+        ("interpret", resolved, why), "pallas interpret=%s (%s)", resolved, why
+    )
+    return resolved
+
+
+def _log_once(key, fmt, *args):
+    if key not in _logged_keys:
+        _logged_keys.add(key)
+        _log.info(fmt, *args)
+
+
+def reset_kernel_config():
+    """Forget the log-once state and the in-memory autotune cache (tests)."""
+    global _tune_cache
+    _logged_keys.clear()
+    _tune_cache = None
 
 
 def use_interpret() -> bool:
-    """Pallas interpret mode everywhere except a real TPU backend."""
-    return jax.default_backend() != "tpu"
+    """Back-compat alias: the resolved interpret flag for a raw pallas call."""
+    return resolve_interpret(None)
 
 
 def cdiv(a: int, b: int) -> int:
@@ -51,3 +164,125 @@ def pick_block_m(m: int, target: int = 256) -> int:
         if m % b == 0:
             return b
     return 1
+
+
+# ---------------------------------------------------------------------------
+# block_m autotuner (measured, persistently cached)
+# ---------------------------------------------------------------------------
+
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE = os.path.join("artifacts", "autotune", "block_m.json")
+#: tiling targets swept by the tuner; each maps to a *legal* divisor of M
+DEFAULT_BLOCK_TARGETS = (64, 128, 256, 512, 1024)
+
+_tune_cache: Optional[dict] = None
+
+
+def _cache_path() -> str:
+    return os.environ.get(AUTOTUNE_CACHE_ENV, _DEFAULT_CACHE)
+
+
+def _load_tune_cache() -> dict:
+    global _tune_cache
+    if _tune_cache is None:
+        try:
+            with open(_cache_path()) as f:
+                _tune_cache = json.load(f)
+        except (OSError, ValueError):
+            _tune_cache = {}
+    return _tune_cache
+
+
+def _save_tune_cache():
+    path = _cache_path()
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(_tune_cache, f, indent=1, sort_keys=True)
+    except OSError:  # read-only FS: the in-memory cache still amortizes
+        pass
+
+
+def candidate_block_ms(
+    m: int, targets: Sequence[int] = DEFAULT_BLOCK_TARGETS
+) -> list[int]:
+    """Distinct legal block_m candidates (each divides ``m``)."""
+    return sorted({pick_block_m(m, t) for t in targets})
+
+
+def time_candidate(fn: Callable[[], object], warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of ``fn()`` after warmup (compile excluded)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def _tune_key(op: str, shape, dtype) -> str:
+    return "|".join(
+        (op, jax.default_backend(), "x".join(map(str, shape)), str(jax.numpy.dtype(dtype)))
+    )
+
+
+def tuned_block_m(
+    op: str,
+    shape: Iterable[int],
+    dtype,
+    measure: Optional[Callable[[int], float]] = None,
+    targets: Sequence[int] = DEFAULT_BLOCK_TARGETS,
+) -> int:
+    """Best measured ``block_m`` for one (op, shape, dtype, backend) site.
+
+    ``measure(block_m) -> seconds`` runs the compiled kernel at one candidate
+    tiling; the winner is persisted (``artifacts/autotune/block_m.json`` by
+    default, ``REPRO_AUTOTUNE_CACHE`` to relocate) so every later process
+    skips straight to the cached choice.  Without a ``measure`` callable —
+    or on the interpret/reference paths, where timing the emulation is noise —
+    the deterministic ``pick_block_m`` divisor is returned.
+
+    Measurement needs *concrete* arrays, so under ``jit`` tracing the ops
+    layer calls this with ``measure=None`` and the persisted cache is the
+    only source of a tuned choice: tune by invoking the wrapper eagerly once
+    per shape (``kernels_bench`` does; so does any eager warmup call) and
+    every traced call thereafter — in this process or a later one — reads
+    the cached winner.
+    """
+    shape = tuple(int(d) for d in shape)
+    m = spatial_size(shape)
+    if kernel_path() != "compiled":
+        return pick_block_m(m)
+    cands = candidate_block_ms(m, targets)
+    if len(cands) == 1:
+        return cands[0]
+    key = _tune_key(op, shape, dtype)
+    cache = _load_tune_cache()
+    if key in cache and cache[key] in cands:
+        return int(cache[key])
+    if measure is None:  # tracing / no way to measure: deterministic pick
+        return pick_block_m(m)
+    timings = {bm: measure(bm) for bm in cands}
+    best = min(timings, key=timings.get)
+    cache[key] = int(best)
+    _save_tune_cache()
+    _log.info(
+        "autotuned %s: block_m=%d out of %s (%.1fus best)",
+        key, best, cands, timings[best] * 1e6,
+    )
+    return int(best)
+
+
+def resolve_block_m(op: str, x, block_m: Optional[int], measure=None) -> int:
+    """Ops-layer entry: explicit ``block_m`` is made legal for the shape;
+    ``None`` consults the autotuner — measuring on eager concrete-array
+    calls, cache-lookup-only under tracing (see :func:`tuned_block_m`)."""
+    m = spatial_size(x.shape)
+    if block_m is not None:
+        return pick_block_m(m, block_m)
+    if isinstance(x, jax.core.Tracer):
+        measure = None
+    return tuned_block_m(op, x.shape, x.dtype, measure)

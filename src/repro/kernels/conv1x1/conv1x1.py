@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(x_ref, w_ref, y_ref):
     x = x_ref[...]
@@ -41,7 +43,7 @@ def _gw_kernel(x_ref, gy_ref, gw_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def conv1x1_gw(x, gy, *, block_m: int = 256, interpret: bool = True):
+def conv1x1_gw(x, gy, *, block_m: int = 256, interpret: bool | None = None):
     """Weight cotangent ``gW = sum_{b,m} x[b,m,:]^T gy[b,m,:]`` -> (C, C) f32.
 
     Same layout as the forward: position tiles stream through VMEM while the
@@ -60,12 +62,12 @@ def conv1x1_gw(x, gy, *, block_m: int = 256, interpret: bool = True):
         ],
         out_specs=pl.BlockSpec((c, c), lambda i, j: (0, 0)),  # accumulated
         out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, gy)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def conv1x1_mm(x, w, *, block_m: int = 256, interpret: bool = True):
+def conv1x1_mm(x, w, *, block_m: int = 256, interpret: bool | None = None):
     """x: (B, M, C); w: (C, C) -> (B, M, C)."""
     b, m, c = x.shape
     block_m = min(block_m, m)
@@ -79,5 +81,5 @@ def conv1x1_mm(x, w, *, block_m: int = 256, interpret: bool = True):
         ],
         out_specs=pl.BlockSpec((1, block_m, c), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((b, m, c), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, w)

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _fwd_kernel(x_ref, raw_ref, t_ref, y_ref, ld_ref, *, clamp: float):
     m = pl.program_id(1)
@@ -90,7 +92,8 @@ def _grid_specs(b, m, c, block_m):
 
 
 @functools.partial(jax.jit, static_argnames=("clamp", "block_m", "interpret"))
-def coupling_fwd(x, raw, t, *, clamp: float = 2.0, block_m: int = 256, interpret: bool = True):
+def coupling_fwd(x, raw, t, *, clamp: float = 2.0, block_m: int = 256,
+                 interpret: bool | None = None):
     """x, raw, t: (B, M, C) -> (y: (B, M, C), logdet: (B,))."""
     b, m, c = x.shape
     block_m = min(block_m, m)
@@ -108,14 +111,14 @@ def coupling_fwd(x, raw, t, *, clamp: float = 2.0, block_m: int = 256, interpret
             jax.ShapeDtypeStruct((b, m, c), x.dtype),
             jax.ShapeDtypeStruct((b, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, raw, t)
     return y, ld[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("clamp", "block_m", "interpret"))
 def coupling_bwd(y, raw, t, gy, gld, *, clamp: float = 2.0, block_m: int = 256,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """Backward from the *output*: ``(y, raw, t, gy, gld)`` -> ``(x, gx, graw, gt)``.
 
     y, raw, t, gy: (B, M, C); gld: (B,) logdet cotangent (f32).
@@ -139,13 +142,14 @@ def coupling_bwd(y, raw, t, gy, gld, *, clamp: float = 2.0, block_m: int = 256,
             jax.ShapeDtypeStruct((b, m, c), raw.dtype),  # graw
             jax.ShapeDtypeStruct((b, m, c), t.dtype),    # gt
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(y, raw, t, gy, gld.astype(jnp.float32).reshape(b, 1))
     return x, gx, graw, gt
 
 
 @functools.partial(jax.jit, static_argnames=("clamp", "block_m", "interpret"))
-def coupling_inv(y, raw, t, *, clamp: float = 2.0, block_m: int = 256, interpret: bool = True):
+def coupling_inv(y, raw, t, *, clamp: float = 2.0, block_m: int = 256,
+                 interpret: bool | None = None):
     b, m, c = y.shape
     block_m = min(block_m, m)
     assert m % block_m == 0, (m, block_m)
@@ -156,5 +160,5 @@ def coupling_inv(y, raw, t, *, clamp: float = 2.0, block_m: int = 256, interpret
         in_specs=[tile, tile, tile],
         out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((b, m, c), y.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(y, raw, t)

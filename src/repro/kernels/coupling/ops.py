@@ -1,4 +1,4 @@
-"""Public wrappers for the fused coupling kernel (auto interpret off-TPU).
+"""Public wrappers for the fused coupling kernel.
 
 ``fused_coupling_fwd`` carries a ``jax.custom_vjp`` whose backward is the
 fused ``coupling_bwd`` Pallas kernel: the residuals are ``(y, raw, t)`` — the
@@ -6,6 +6,14 @@ fused ``coupling_bwd`` Pallas kernel: the residuals are ``(y, raw, t)`` — the
 emitting all three cotangents in the same tile visit.  This makes the kernel
 trainable (flow training routes through it with ``grad_mode="coupled"``),
 not just usable on the sampling inverse.
+
+Execution dispatch (``kernels.common.kernel_path()``): compiled Pallas on
+TPU with ``block_m`` autotuned and cached; the jnp oracle on CPU/GPU
+(identical math, XLA-fused — interpret-mode emulation is debug-only, forced
+via ``REPRO_PALLAS_INTERPRET=1``).  The interpret flag is resolved *eagerly*
+here (the wrappers are never jitted) and threaded through the custom VJP as
+a static argument, so jit caches key on the resolved value rather than on a
+trace-time env read.
 """
 
 from __future__ import annotations
@@ -14,44 +22,82 @@ import functools
 
 import jax
 
-from repro.kernels.common import use_interpret
+from repro.kernels.common import (
+    kernel_path,
+    resolve_block_m,
+    resolve_interpret,
+    time_candidate,
+)
 from repro.kernels.coupling.coupling import coupling_bwd, coupling_fwd, coupling_inv
+from repro.kernels.coupling.ref import (
+    coupling_bwd_ref,
+    coupling_fwd_ref,
+    coupling_inv_ref,
+)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def fused_coupling_fwd(x, raw, t, clamp: float = 2.0, block_m: int = 256):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fwd_pallas(x, raw, t, clamp, block_m, interpret):
     return coupling_fwd(
-        x, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret()
+        x, raw, t, clamp=clamp, block_m=block_m, interpret=interpret
     )
 
 
-def _fwd_fwd(x, raw, t, clamp, block_m):
+def _fwd_fwd(x, raw, t, clamp, block_m, interpret):
     y, ld = coupling_fwd(
-        x, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret()
+        x, raw, t, clamp=clamp, block_m=block_m, interpret=interpret
     )
     # memory story: residuals are the *output* (y, raw, t); x is reconstructed
     # inside the backward kernel, never stored across the fwd/bwd boundary.
     return (y, ld), (y, raw, t)
 
 
-def _fwd_bwd(clamp, block_m, res, cts):
+def _fwd_bwd(clamp, block_m, interpret, res, cts):
     y, raw, t = res
     gy, gld = cts
     _x, gx, graw, gt = coupling_bwd(
-        y, raw, t, gy, gld, clamp=clamp, block_m=block_m, interpret=use_interpret()
+        y, raw, t, gy, gld, clamp=clamp, block_m=block_m, interpret=interpret
     )
     return gx, graw, gt
 
 
-fused_coupling_fwd.defvjp(_fwd_fwd, _fwd_bwd)
+_fwd_pallas.defvjp(_fwd_fwd, _fwd_bwd)
 
 
-def fused_coupling_inv(y, raw, t, clamp: float = 2.0, block_m: int = 256):
-    return coupling_inv(y, raw, t, clamp=clamp, block_m=block_m, interpret=use_interpret())
+def _measure_fwd(x, raw, t, clamp):
+    def run(bm):
+        return time_candidate(
+            lambda: coupling_fwd(x, raw, t, clamp=clamp, block_m=bm, interpret=False)
+        )
+
+    return run
 
 
-def fused_coupling_bwd(y, raw, t, gy, gld, clamp: float = 2.0, block_m: int = 256):
+def fused_coupling_fwd(x, raw, t, clamp: float = 2.0, block_m: int | None = None):
+    if kernel_path() == "reference":
+        return coupling_fwd_ref(x, raw, t, clamp=clamp)
+    bm = resolve_block_m(
+        "coupling_fwd", x, block_m, measure=_measure_fwd(x, raw, t, clamp)
+    )
+    return _fwd_pallas(x, raw, t, clamp, bm, resolve_interpret(None))
+
+
+def fused_coupling_inv(y, raw, t, clamp: float = 2.0, block_m: int | None = None):
+    if kernel_path() == "reference":
+        return coupling_inv_ref(y, raw, t, clamp=clamp)
+    bm = resolve_block_m("coupling_inv", y, block_m)
+    return coupling_inv(
+        y, raw, t, clamp=clamp, block_m=bm, interpret=resolve_interpret(None)
+    )
+
+
+def fused_coupling_bwd(y, raw, t, gy, gld, clamp: float = 2.0,
+                       block_m: int | None = None):
     """Fused reversible backward: ``(x, gx, graw, gt)`` from the output side."""
+    if kernel_path() == "reference":
+        return coupling_bwd_ref(y, raw, t, gy, gld, clamp=clamp)
+    bm = resolve_block_m("coupling_bwd", y, block_m)
     return coupling_bwd(
-        y, raw, t, gy, gld, clamp=clamp, block_m=block_m, interpret=use_interpret()
+        y, raw, t, gy, gld, clamp=clamp, block_m=bm,
+        interpret=resolve_interpret(None),
     )

@@ -17,6 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -53,7 +55,7 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_ref, state_scr, *, 
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
+def wkv_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
     """r,k,v,w: (B, H, S, K); u: (H, K).
 
     Returns (y: (B,H,S,K) f32, final_state: (B,H,K,K) f32).
@@ -84,5 +86,5 @@ def wkv_scan(r, k, v, w, u, *, chunk: int = 64, interpret: bool = True):
             jax.ShapeDtypeStruct((bsz, h, kdim, kdim), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((kdim, kdim), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(r, k, v, w, u)

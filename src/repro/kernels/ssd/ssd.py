@@ -23,6 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -76,7 +78,8 @@ def _ssd_kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, da, dt, b_in, c_in, *, chunk: int = 128, interpret: bool = True):
+def ssd_scan(x, da, dt, b_in, c_in, *, chunk: int = 128,
+             interpret: bool | None = None):
     """Blocked SSD scan.
 
     x: (B, H, S, P); da, dt: (B, H, S); b_in, c_in: (B, S, N) (group
@@ -109,5 +112,5 @@ def ssd_scan(x, da, dt, b_in, c_in, *, chunk: int = 128, interpret: bool = True)
             jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, da, dt, b_in[:, None], c_in[:, None])

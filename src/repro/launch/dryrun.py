@@ -41,7 +41,7 @@ def make_train_step(model, tcfg: TrainConfig, grad_mode=None, grad_specs=None,
 
         (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
         if grad_specs is not None:
-            # ZeRO-1 (§Perf/H4): land gradients directly in the moment
+            # ZeRO-1 (§Perf/H5): land gradients directly in the moment
             # sharding — the DP all-reduce becomes a reduce-scatter and the
             # optimizer update runs on 1/dp-th of each tensor per device.
             grads = jax.tree_util.tree_map(
@@ -69,12 +69,12 @@ def parse_variant(variant: str):
 
     standard  -> reversible=False (naive-AD architecture baseline)
     coupled   -> fused reversible backward (§Perf/H1)
-    bf16res   -> bf16 residual streams (§Perf/H2)
-    wkvchunk  -> chunked rwkv wkv scan (§Perf/H3)
-    zero1     -> ZeRO-1 optimizer-state sharding (§Perf/H4)
-    attnseq   -> sequence-parallel attention (§Perf/H6)
-    servefix  -> bf16 serving weights + seq-sharded KV fallback (§Perf/H5)
-    fsdp      -> params+moments sharded over data axes too (§Perf/H7)
+    bf16res   -> bf16 residual streams (§Perf/H3)
+    wkvchunk  -> chunked rwkv wkv scan (§Perf/H4)
+    zero1     -> ZeRO-1 optimizer-state sharding (§Perf/H5)
+    attnseq   -> sequence-parallel attention (§Perf/H7)
+    servefix  -> bf16 serving weights + seq-sharded KV fallback (§Perf/H6)
+    fsdp      -> params+moments sharded over data axes too (§Perf/H8)
     """
     tokens = [t for t in variant.split("-") if t]
     for t in tokens:
@@ -131,7 +131,7 @@ def lower_cell(arch: str, shape: ShapeSpec, mesh, mesh_name: str, variant: str =
 
     params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     if opts["serve_bf16"] and shape.kind != "train":
-        # serving deployments hold bf16 weights (§Perf/H5)
+        # serving deployments hold bf16 weights (§Perf/H6)
         params_spec = jax.tree_util.tree_map(
             lambda v: jax.ShapeDtypeStruct(v.shape, jnp.bfloat16)
             if v.dtype == jnp.float32

@@ -80,7 +80,7 @@ class Model:
 
         ``layer_constraint``: optional PartitionSpec tree for the *per-layer
         parameter slice* — applied inside the scan body so FSDP-sharded
-        weights are all-gathered one layer at a time (§Perf/H7)."""
+        weights are all-gathered one layer at a time (§Perf/H8)."""
         cfg = self.cfg
         positions = jnp.arange(seq_len)
         pos0 = jnp.zeros((), jnp.int32)

@@ -54,7 +54,7 @@ def _project_qkv(params, x, cfg: AttentionConfig, positions):
 
 
 def _seq_shard_constraints(q, k, v):
-    """Sequence-parallel attention layout (§Perf/H6): queries sharded over
+    """Sequence-parallel attention layout (§Perf/H7): queries sharded over
     the model axis on the sequence dim, K/V replicated over it — avoids the
     partial-contraction score all-reduce GSPMD picks when head counts don't
     divide the model axis."""
@@ -141,7 +141,7 @@ def attn_apply(
         kv_pos = jnp.arange(k_cache.shape[1])
         pos1d = positions[0] if positions.ndim > 1 else positions
         if seq_shard:
-            # flash-decode layout (§Perf/H5/H6): replicate queries over the
+            # flash-decode layout (§Perf/H6/H7): replicate queries over the
             # model axis, shard the cache *sequence* over it; the softmax
             # normalizers all-reduce small (B, Sq) tensors instead of GSPMD
             # partial-contracting oblique head shards (32768^2 score ARs).

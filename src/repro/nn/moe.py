@@ -1,5 +1,5 @@
 """Mixture-of-experts FFN with deterministic top-k routing and GROUP-LOCAL
-capacity dispatch (Switch/T5X layout, §Perf/H8).
+capacity dispatch (Switch/T5X layout, §Perf/H9).
 
 Tokens are grouped by batch row and every group computes its own expert
 positions (cumsum over its own sequence only) and its own capacity slice of
@@ -8,7 +8,7 @@ scatters never cross data shards — the only cross-device traffic is the
 (groups <-> experts) all-to-all around the expert matmuls, which is the
 textbook expert-parallel schedule.  (The previous revision used a global
 flat-token cumsum; GSPMD resolved its cross-shard scatters with full-width
-all-reduces — 731 GiB/step on granite-moe; see EXPERIMENTS.md §Perf/H8.)
+all-reduces — 731 GiB/step on granite-moe; see EXPERIMENTS.md §Perf/H9.)
 
 Reversible-stack notes (unchanged):
 * routing is deterministic (`lax.top_k` on f32), so recompute-by-inversion

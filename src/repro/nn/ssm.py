@@ -261,7 +261,7 @@ def _wkv_scan(r, k, v, w, u, state0):
 
 
 def _wkv_scan_chunked(r, k, v, w, u, state0, chunk: int = 16):
-    """Chunked wkv (EXPERIMENTS.md §Perf/H3): scan over chunks, inner steps
+    """Chunked wkv (EXPERIMENTS.md §Perf/H4): scan over chunks, inner steps
     unrolled so the state round-trips HBM once per *chunk* instead of once
     per token (the XLA analogue of the VMEM-resident Pallas kernel; on TPU
     the kernel in ``repro.kernels.rwkv`` keeps it fully resident)."""

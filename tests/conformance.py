@@ -30,6 +30,7 @@ from repro.core import (
     ActNorm,
     AffineCoupling,
     Conv1x1,
+    GlowStepStack,
     HINTCoupling,
     HaarSqueeze,
     HyperbolicLayer,
@@ -40,6 +41,7 @@ from repro.core import (
     Squeeze,
     build_chint,
     build_glow,
+    build_glow_scanned,
     build_hyperbolic,
     build_realnvp,
 )
@@ -219,6 +221,16 @@ CASES = [
     Case("split", Split, _state((1, 6), (1, 2))),
     Case("pack", Pack, _arr((1, 5))),
     Case("onfirst-actnorm", lambda: OnFirst(ActNorm()), _state((1, 4), (1, 2))),
+    # -- the scan-compiled flow-step stack (megakernel path).  grad_mode
+    # "autodiff" keeps the internal scan plain so jacfwd can pierce it for
+    # the logdet check; the fused_bwd hook (what the coupled outer engine
+    # dispatches) is mode-independent and runs the megakernel reverse scan.
+    Case(
+        "glow-step-stack",
+        lambda: GlowStepStack(k_steps=2, hidden=8, grad_mode="autodiff"),
+        _arr((1, 4, 4, 4)),
+        perturb=0.1,
+    ),
     # -- a nested chain as a layer (exercises InvertibleChain.fused_bwd).
     # grad_mode here only shapes the inner chain's own forward (plain apply,
     # so jacfwd can pierce it for the logdet check); the fused_bwd hook is
@@ -244,6 +256,16 @@ CASES_BY_NAME = {c.name: c for c in CASES}
 CHAIN_BUILDERS = {
     "glow": (
         lambda gm: build_glow(n_scales=2, k_steps=2, hidden=8, grad_mode=gm),
+        _arr((2, 8, 8, 3)),
+    ),
+    # coupled_bwd pinned to "reversible" so the probes exercise the
+    # megakernel reverse scan on every backend (the builder's "auto" would
+    # resolve to the stored-transpose strategy on CPU)
+    "glow_scanned": (
+        lambda gm: build_glow_scanned(
+            n_scales=2, k_steps=2, hidden=8, grad_mode=gm,
+            coupled_bwd="reversible",
+        ),
         _arr((2, 8, 8, 3)),
     ),
     "realnvp": (

@@ -29,6 +29,17 @@ from repro.kernels.ssd.ref import ssd_ref
 RNG = jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True)
+def _exercise_kernel_bodies(monkeypatch):
+    """These tests pin the *Pallas kernel bodies* against the jnp oracles, so
+    the public wrappers must not take the reference dispatch (the CPU
+    default) — force interpret so every call executes the kernel."""
+    from repro.kernels.common import INTERPRET_ENV
+
+    monkeypatch.setenv(INTERPRET_ENV, "1")
+    yield
+
+
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
 
