@@ -73,6 +73,37 @@ def _stop(x):
     return jax.tree_util.tree_map(lax.stop_gradient, x)
 
 
+def psum_cotangents(tree, axis: Optional[str]):
+    """Reduce *replicated-input* cotangents over a mapped mesh axis.
+
+    Under ``shard_map`` data parallelism (``repro.dist``) the params (and
+    the scan engine's shared ``extra`` pytree) are replicated while ``x``
+    is batch-sharded, so each device's backward produces only its shard's
+    contribution to ``gparams`` — including the fused kernels' ``gW`` and
+    actnorm accumulators.  A single ``lax.psum`` over the data axis at the
+    VJP boundary makes the custom VJP SPMD-correct (grad-identical to the
+    single-device backward up to f32 reduction order).  Batch-aligned
+    inputs (``x``, and the chain engine's per-example ``cond``) must NOT
+    pass through here — their cotangents are per-shard by construction.
+    ``float0`` cotangents (integer permutation/sign buffers) and ``None``
+    subtrees pass through untouched.  Outside any mapping of the axis
+    (plain single-device differentiation of the same flow) the reduction
+    is a no-op, so one flow object serves both contexts.
+    """
+    if axis is None or tree is None:
+        return tree
+
+    def red(v):
+        if v is None or getattr(v, "dtype", None) == jax.dtypes.float0:
+            return v
+        return lax.psum(v, axis)
+
+    try:
+        return jax.tree_util.tree_map(red, tree, is_leaf=lambda v: v is None)
+    except NameError:  # axis unbound: not under shard_map/pmap of `axis`
+        return tree
+
+
 def _zero_logdet(x: PyTree) -> jax.Array:
     b = jax.tree_util.tree_leaves(x)[0].shape[0]
     return jnp.zeros((b,), jnp.float32)
@@ -123,7 +154,9 @@ def chain_backward(layers, params, y, gy, gld, cond, use_fused: bool):
 
 
 def make_chain_apply(
-    layers: Sequence[Invertible], grad_mode: str = "invertible"
+    layers: Sequence[Invertible],
+    grad_mode: str = "invertible",
+    psum_axis: Optional[str] = None,
 ) -> Callable[..., tuple[PyTree, jax.Array]]:
     """Build ``apply(params_tuple, x, cond=None) -> (y, logdet)`` for a chain.
 
@@ -133,6 +166,11 @@ def make_chain_apply(
     are never stored.  ``grad_mode="coupled"`` keeps the same residuals but
     dispatches to each layer's ``fused_bwd`` hook when present (see module
     docstring), falling back to the generic invert-then-vjp step otherwise.
+
+    ``psum_axis`` names a mapped mesh axis (``shard_map`` data parallelism):
+    the custom VJP reduces ``gparams``/``gcond`` over it so the chain is
+    SPMD-correct with batch-sharded ``x`` and replicated params (no effect
+    on ``"autodiff"``, which has no custom VJP to reduce in).
     """
     layers = tuple(layers)
 
@@ -170,6 +208,10 @@ def make_chain_apply(
         _x, gx, gparams, gcond = chain_backward(
             layers, params, y, gy, gld, cond, use_fused
         )
+        # cond is per-example (batch-aligned with x) throughout the flow
+        # zoo, so under shard_map it is sharded like x and its cotangent
+        # stays per-shard — only the replicated params reduce
+        gparams = [psum_cotangents(gp, psum_axis) for gp in gparams]
         return tuple(gparams), gx, gcond
 
     apply.defvjp(apply_fwd, apply_bwd)
@@ -222,6 +264,7 @@ def make_scan_apply(
     grad_mode: str = "invertible",
     unroll: int = 1,
     step_bwd: Optional[Callable] = None,
+    psum_axis: Optional[str] = None,
 ) -> Callable[..., tuple[PyTree, jax.Array]]:
     """Build ``apply(stacked_params, x, extra=None) -> (y, logdet)``.
 
@@ -239,6 +282,11 @@ def make_scan_apply(
     inverse reconstruction and the local VJP share one evaluation of each
     residual unit (RevNet-style; 4/3 fwd-equivalents instead of the generic
     engine's 5/3).  Beyond-paper optimization; see EXPERIMENTS.md §Perf/H1.
+
+    ``psum_axis``: as in :func:`make_chain_apply` — the custom VJP reduces
+    the stacked parameter cotangents (one collective on the whole stacked
+    tree, after the reverse scan's per-shard accumulation) and the shared
+    ``extra`` cotangent over the named mapped axis.
     """
     if grad_mode == "coupled" and step_bwd is None:
         raise ValueError("grad_mode='coupled' requires step_bwd")
@@ -293,7 +341,11 @@ def make_scan_apply(
             _x0, gx, gstacked, gextra = scan_backward(
                 step_bwd, stacked, y, gy, gld, extra, unroll=unroll
             )
-            return gstacked, gx, gextra
+            return (
+                psum_cotangents(gstacked, psum_axis),
+                gx,
+                psum_cotangents(gextra, psum_axis),
+            )
         ids = _layer_ids(stacked)
         gld = gld.astype(jnp.float32)
         gextra0 = jax.tree_util.tree_map(lambda v: jnp.zeros(v.shape, v.dtype), extra)
@@ -315,7 +367,11 @@ def make_scan_apply(
         (x0, gx, gextra), gstacked = lax.scan(
             body, (y, gy, gextra0), (stacked, ids), reverse=True, unroll=unroll
         )
-        return gstacked, gx, gextra
+        return (
+            psum_cotangents(gstacked, psum_axis),
+            gx,
+            psum_cotangents(gextra, psum_axis),
+        )
 
     apply.defvjp(apply_fwd, apply_bwd)
 

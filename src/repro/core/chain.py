@@ -17,10 +17,15 @@ from repro.core.types import Invertible, PyTree, example_array
 
 
 class InvertibleChain(Invertible):
-    def __init__(self, layers: Sequence[Invertible], grad_mode: str = "invertible"):
+    def __init__(self, layers: Sequence[Invertible], grad_mode: str = "invertible",
+                 psum_axis: Optional[str] = None):
         self.layers = tuple(layers)
         self.grad_mode = grad_mode
-        self._apply = make_chain_apply(self.layers, grad_mode)
+        # data-parallel SPMD: only the custom-VJP modes reduce cotangents in
+        # the backward; record the *effective* axis so dist helpers can tell
+        # whether this chain's VJP already psums (repro.dist.flow)
+        self.psum_axis = psum_axis if grad_mode in ("invertible", "coupled") else None
+        self._apply = make_chain_apply(self.layers, grad_mode, psum_axis=psum_axis)
 
     def init(self, rng, x, cond=None):
         x = example_array(x)

@@ -76,12 +76,19 @@ class ConditionalFlow:
     kernel_inverse=True)``) used by the sampling paths, so the large
     repeated-``cond`` batches of amortized posterior sampling run through the
     fused Pallas inverse kernel instead of the plain XLA inverse.
+
+    ``mesh``: optional ``("data", ...)`` mesh — ``log_prob`` and the
+    sampling paths place their batches with the leading axis sharded over
+    the data axes (``repro.dist``), so amortized posterior sampling (the
+    n-times-repeated-``cond`` wide batch) scales across devices.  Batches
+    whose extent doesn't divide the data axes fall back to replication.
     """
 
     def __init__(self, flow: InvertibleChain, summary: SummaryMLP | None = None,
-                 sample_flow: InvertibleChain | None = None):
+                 sample_flow: InvertibleChain | None = None, mesh=None):
         self.flow = flow
         self.summary = summary
+        self.mesh = mesh
         if sample_flow is not None:
             # the twin consumes `params["flow"]` verbatim, and a chain's
             # inverse would silently zip-truncate a mismatched params tuple —
@@ -111,7 +118,17 @@ class ConditionalFlow:
             return y
         return self.summary.apply(params["summary"], y)
 
+    def _place(self, *arrays):
+        """Batch-shard arrays over the mesh's data axes (no-op without a
+        mesh, or for extents that don't divide it)."""
+        if self.mesh is None:
+            return arrays
+        from repro.dist.flow import shard_batch
+
+        return tuple(shard_batch(a, self.mesh) for a in arrays)
+
     def log_prob(self, params, theta, y):
+        theta, y = self._place(theta, y)
         cond = self._cond(params, y)
         z, logdet = self.flow.forward(params["flow"], theta, cond)
         return std_normal_logpdf(z) + logdet
@@ -126,13 +143,16 @@ class ConditionalFlow:
         The n-times-repeated ``cond`` makes this the widest batch in the
         amortized workflow; it runs through ``sample_flow`` (the
         ``kernel_inverse=True`` twin when one was provided) in a single
-        kernel-backed inverse call rather than the plain inverse."""
+        kernel-backed inverse call rather than the plain inverse.  With a
+        ``mesh`` the repeated batch is sharded over the data axes first."""
         cond = self._cond(params, y)
         cond = jnp.repeat(cond, n, axis=0)
         z = jax.random.normal(rng, (cond.shape[0], theta_dim))
+        z, cond = self._place(z, cond)
         return self.sample_flow.inverse(params["flow"], z, cond)
 
     def sample_like(self, params, rng, y, theta_like):
         cond = self._cond(params, y)
         z = std_normal_sample(rng, theta_like)
+        z, cond = self._place(z, cond)
         return self.sample_flow.inverse(params["flow"], z, cond)

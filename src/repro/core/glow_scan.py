@@ -100,7 +100,8 @@ class GlowStepStack(Invertible):
 
     def __init__(self, k_steps: int, hidden: int = 64, clamp: float = 2.0,
                  grad_mode: str = "invertible", conditioner_factory=None,
-                 unroll: int | None = None, coupled_bwd: str = "auto"):
+                 unroll: int | None = None, coupled_bwd: str = "auto",
+                 psum_axis: str | None = None):
         self.k_steps = k_steps
         self.hidden = hidden
         self.clamp = clamp
@@ -117,6 +118,11 @@ class GlowStepStack(Invertible):
         apply_mode = (
             "autodiff" if self.coupled_bwd == "stored" else grad_mode
         )
+        # record the *effective* reduction axis: only the custom-VJP modes
+        # psum cotangents in their backward (repro.dist.flow consults this)
+        self.psum_axis = (
+            psum_axis if apply_mode in ("invertible", "coupled") else None
+        )
         step_bwd = (
             (lambda p, y, gy, gld, extra, i: self._step_bwd(p, y, gy, gld, extra))
             if apply_mode == "coupled"
@@ -128,6 +134,7 @@ class GlowStepStack(Invertible):
             grad_mode=apply_mode,
             step_bwd=step_bwd,
             unroll=self.unroll,
+            psum_axis=psum_axis,
         )
 
     # -- parameters ---------------------------------------------------------
@@ -354,6 +361,7 @@ def build_glow_scanned(
     clamp: float = 2.0,
     coupled_bwd: str = "auto",
     unroll: int | None = None,
+    psum_axis: str | None = None,
 ) -> InvertibleChain:
     """Scan-compiled GLOW for (B, H, W, C) inputs (H, W divisible by
     2**n_scales): per scale, squeeze → one :class:`GlowStepStack` of
@@ -367,7 +375,14 @@ def build_glow_scanned(
     the reversible megakernel reverse scan off-CPU, XLA's stored-activation
     transpose on CPU.  With the stored strategy the *whole* chain
     differentiates by plain AD (the output-residual chain VJP would discard
-    the stored activations at its boundary)."""
+    the stored activations at its boundary).
+
+    ``psum_axis`` makes the chain's custom VJP data-parallel-safe under
+    ``shard_map`` over the named mesh axis (``repro.dist.flow``): parameter
+    and cond cotangents are psum-reduced at the VJP boundary.  With the CPU
+    "stored" strategy the chain differentiates by plain AD and the dist
+    helpers reduce the gradients themselves (``InvertibleChain.psum_axis``
+    reads back the effective setting)."""
     squeeze = HaarSqueeze if haar else Squeeze
     chain_mode = grad_mode
     if grad_mode == "coupled" and resolve_coupled_bwd(coupled_bwd) == "stored":
@@ -375,6 +390,10 @@ def build_glow_scanned(
     layers = [Pack()]
     for scale in range(n_scales):
         layers.append(OnFirst(squeeze()))
+        # psum_axis goes on the *outermost* chain only: the chain VJP reduces
+        # every layer's cotangents once; a stack-level psum would double-
+        # reduce on the generic invert-then-vjp path (which differentiates
+        # through the stack's own custom VJP)
         layers.append(
             OnFirst(GlowStepStack(k_steps, hidden=hidden, clamp=clamp,
                                   grad_mode=grad_mode, coupled_bwd=coupled_bwd,
@@ -382,4 +401,4 @@ def build_glow_scanned(
         )
         if scale != n_scales - 1:
             layers.append(Split())
-    return InvertibleChain(layers, grad_mode=chain_mode)
+    return InvertibleChain(layers, grad_mode=chain_mode, psum_axis=psum_axis)

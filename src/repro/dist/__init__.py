@@ -1,0 +1,51 @@
+"""``repro.dist`` — the sharding / pipeline subsystem.
+
+Mesh-aware building blocks shared by the launchers, the training loop, the
+serving engines and the dry-run:
+
+* :mod:`repro.dist.sharding` — PartitionSpec inference over arbitrary
+  param / batch / optimizer / cache pytrees for ``("data", "model")`` meshes
+  (with an optional leading ``"pod"`` axis), plus the spec→sharding mapper.
+* :mod:`repro.dist.pipeline` — microbatched pipeline parallelism over
+  layer-stacked stage parameters via ``shard_map`` + collective permutes.
+* :mod:`repro.dist.flow` — data-parallel flow training/serving helpers:
+  ``shard_map``-based NLL value-and-grad (the coupled reversible VJP with
+  per-shard accumulators ``psum``-reduced over the data axis) and
+  batch-sharded placement for ``sample`` / ``log_prob``.
+
+Everything here is backend-agnostic: the multi-device tests forge 8 CPU
+host devices via ``--xla_force_host_platform_device_count`` and the same
+code drives real TPU meshes.
+"""
+
+from repro.dist import flow, pipeline, sharding
+from repro.dist.flow import dp_value_and_grad_nll, shard_batch
+from repro.dist.pipeline import pipeline_forward, pipeline_stage_fn
+from repro.dist.sharding import (
+    batch_pspecs,
+    batch_sharding,
+    cache_pspecs,
+    data_axis_names,
+    layer_slice_pspecs,
+    opt_pspecs,
+    params_pspecs,
+    to_shardings,
+)
+
+__all__ = [
+    "batch_pspecs",
+    "batch_sharding",
+    "cache_pspecs",
+    "data_axis_names",
+    "dp_value_and_grad_nll",
+    "flow",
+    "layer_slice_pspecs",
+    "opt_pspecs",
+    "params_pspecs",
+    "pipeline",
+    "pipeline_forward",
+    "pipeline_stage_fn",
+    "shard_batch",
+    "sharding",
+    "to_shardings",
+]

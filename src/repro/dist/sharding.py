@@ -1,0 +1,223 @@
+"""PartitionSpec inference for arbitrary pytrees on ``("data", "model")`` meshes.
+
+One rule set covers every state pytree the system moves across devices —
+model parameters (flat or layer-stacked), train batches, optimizer moments,
+and serve caches — so the launchers, the dry-run, the training loop and the
+elastic-checkpoint restore all agree on where a given array lives:
+
+* **params** — each leaf is tensor-parallel sharded over ``"model"`` along
+  its largest divisible axis (later axes win ties: output features before
+  input features).  1-D leaves (norm gains, biases) and leaves with no
+  divisible axis replicate.  Layer-stacked leaves (ndim >= 3) never shard
+  the leading stack axis — ``lax.scan`` iterates it.  ``fsdp=True``
+  additionally shards a *second* axis over the data axes (§Perf/H8).
+* **batch** — leading (batch) axis over the combined data axes
+  (``("pod", "data")`` on multi-pod meshes), replicated when not divisible.
+* **optimizer** — moments mirror their parameter's spec (``None`` moments of
+  integer buffers stay ``None``); ``zero1=True`` additionally shards each
+  moment over the data axes so the update runs on 1/dp-th of each tensor
+  per device (§Perf/H5).  The scalar ``step`` replicates.
+* **caches** — layer-stacked serve caches shard their batch axis (axis 1)
+  over the data axes; ``seq_fallback_model=True`` adds sequence sharding of
+  KV-like leaves over ``"model"`` (§Perf/H6).
+
+All functions accept concrete arrays *or* ``ShapeDtypeStruct`` stand-ins —
+only ``.shape`` is consulted — so the zero-allocation dry-run and the real
+launchers share one code path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+MODEL_AXIS = "model"
+#: mesh axes treated as (replicated-param) data-parallel axes, in mesh order
+DATA_AXIS_NAMES = ("pod", "data")
+
+
+def data_axis_names(mesh) -> tuple[str, ...]:
+    """The mesh's data-parallel axis names (``("data",)``, or
+    ``("pod", "data")`` on a multi-pod mesh), in mesh order."""
+    return tuple(a for a in mesh.axis_names if a in DATA_AXIS_NAMES)
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def _data_size(mesh) -> int:
+    return math.prod(_axis_size(mesh, a) for a in data_axis_names(mesh)) or 1
+
+
+def _data_entry(mesh):
+    """The PartitionSpec entry sharding one dim over all data axes."""
+    names = data_axis_names(mesh)
+    return names if len(names) > 1 else names[0]
+
+
+def _shape(leaf) -> tuple[int, ...]:
+    return tuple(getattr(leaf, "shape", ()) or ())
+
+
+def _best_axis(shape, size: int, taken=()) -> int | None:
+    """Largest-extent axis divisible by ``size`` (later axes win ties)."""
+    best = None
+    for d, ext in enumerate(shape):
+        if d in taken or size <= 1 or ext < size or ext % size:
+            continue
+        if best is None or ext >= shape[best]:
+            best = d
+    return best
+
+
+def _spec(entries) -> PartitionSpec:
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def params_pspecs(params, mesh, fsdp: bool = False):
+    """PartitionSpec tree for a parameter pytree (see module docstring).
+
+    Works on any nesting of dicts/tuples/lists; leaves need only ``.shape``.
+    The returned tree has exactly the input's structure (round-trip safe).
+    """
+    n_model = _axis_size(mesh, MODEL_AXIS)
+    n_data = _data_size(mesh)
+
+    def leaf_spec(leaf):
+        shape = _shape(leaf)
+        if len(shape) < 2:
+            return PartitionSpec()
+        # never shard the leading stack axis of layer-stacked leaves
+        taken = {0} if len(shape) >= 3 else set()
+        entries: list = [None] * len(shape)
+        m_ax = _best_axis(shape, n_model, taken)
+        if m_ax is not None:
+            entries[m_ax] = MODEL_AXIS
+            taken.add(m_ax)
+        if fsdp and n_data > 1:
+            d_ax = _best_axis(shape, n_data, taken)
+            if d_ax is not None:
+                entries[d_ax] = _data_entry(mesh)
+        return _spec(entries)
+
+    return jax.tree_util.tree_map(leaf_spec, params)
+
+
+def layer_slice_pspecs(stacked, mesh):
+    """Specs for a *per-layer slice* of layer-stacked params (leading stack
+    axis dropped), model-sharded only — the ``with_sharding_constraint``
+    applied inside a scan body so FSDP-sharded weights are all-gathered one
+    layer at a time instead of all at once (§Perf/H8)."""
+    n_model = _axis_size(mesh, MODEL_AXIS)
+
+    def leaf_spec(leaf):
+        shape = _shape(leaf)[1:]
+        if len(shape) < 2:
+            return PartitionSpec()
+        entries: list = [None] * len(shape)
+        m_ax = _best_axis(shape, n_model)
+        if m_ax is not None:
+            entries[m_ax] = MODEL_AXIS
+        return _spec(entries)
+
+    return jax.tree_util.tree_map(leaf_spec, stacked)
+
+
+def batch_pspecs(batch, mesh):
+    """Leading-axis (batch) sharding over the combined data axes; leaves
+    whose batch extent doesn't divide evenly replicate."""
+    n_data = _data_size(mesh)
+
+    def leaf_spec(leaf):
+        shape = _shape(leaf)
+        if not shape or n_data <= 1 or shape[0] < n_data or shape[0] % n_data:
+            return PartitionSpec()
+        return PartitionSpec(_data_entry(mesh))
+
+    return jax.tree_util.tree_map(leaf_spec, batch)
+
+
+def opt_pspecs(opt_spec, p_specs, mesh, zero1: bool = False):
+    """Optimizer-state specs mirroring the parameter specs.
+
+    ``opt_spec`` is the AdamW state pytree (``{"mu", "nu", "step"}``; moments
+    are ``None`` for integer buffers and mirror the param shape otherwise).
+    With ``zero1`` each moment is additionally sharded over the data axes
+    along its largest still-unsharded divisible axis, so the DP gradient
+    all-reduce becomes a reduce-scatter and the update runs on a 1/dp shard
+    of every tensor (§Perf/H5).
+    """
+    n_data = _data_size(mesh)
+
+    def moment_spec(m, psp):
+        if m is None:
+            return None
+        shape = _shape(m)
+        entries = list(psp) + [None] * (len(shape) - len(psp))
+        if zero1 and n_data > 1:
+            taken = {d for d, e in enumerate(entries) if e is not None}
+            d_ax = _best_axis(shape, n_data, taken)
+            if d_ax is not None:
+                entries[d_ax] = _data_entry(mesh)
+        return _spec(entries)
+
+    out = {}
+    for key, sub in opt_spec.items():
+        if not _shape(sub) and not jax.tree_util.tree_leaves(sub):
+            out[key] = sub  # empty subtree (all-None moments)
+        elif key in ("mu", "nu"):
+            out[key] = jax.tree_util.tree_map(
+                moment_spec, sub, p_specs, is_leaf=lambda x: x is None
+            )
+        else:  # scalar counters ("step") and anything unrecognized: replicate
+            out[key] = jax.tree_util.tree_map(lambda _: PartitionSpec(), sub)
+    return out
+
+
+def cache_pspecs(caches, mesh, seq_fallback_model: bool = False):
+    """Serve-cache specs: layer-stacked cache leaves ``(L, B, ...)`` shard
+    their batch axis (axis 1) over the data axes.  ``seq_fallback_model``
+    additionally shards the sequence axis (axis 2) of KV-like leaves
+    (ndim >= 4) over ``"model"`` — the seq-sharded KV fallback for decode
+    shapes whose batch doesn't divide the data axes (§Perf/H6)."""
+    n_model = _axis_size(mesh, MODEL_AXIS)
+    n_data = _data_size(mesh)
+
+    def leaf_spec(leaf):
+        shape = _shape(leaf)
+        if len(shape) < 2:
+            return PartitionSpec()
+        entries: list = [None] * len(shape)
+        if n_data > 1 and shape[1] >= n_data and shape[1] % n_data == 0:
+            entries[1] = _data_entry(mesh)
+        if (
+            seq_fallback_model
+            and n_model > 1
+            and len(shape) >= 4
+            and shape[2] % n_model == 0
+            and shape[2] >= n_model
+        ):
+            entries[2] = MODEL_AXIS
+        return _spec(entries)
+
+    return jax.tree_util.tree_map(leaf_spec, caches)
+
+
+def to_shardings(specs, mesh):
+    """Map a pytree of ``PartitionSpec`` (with ``None`` leaves allowed) to
+    the matching tree of ``NamedSharding`` on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp) if isinstance(sp, PartitionSpec) else sp,
+        specs,
+    )
+
+
+def batch_sharding(mesh) -> NamedSharding:
+    """The leading-axis batch sharding as a single ``NamedSharding`` (for
+    ``jax.device_put`` of whole batches whose extent divides the data axes)."""
+    return NamedSharding(mesh, PartitionSpec(_data_entry(mesh)))

@@ -170,8 +170,13 @@ def pick_block_m(m: int, target: int = 256) -> int:
 # block_m autotuner (measured, persistently cached)
 # ---------------------------------------------------------------------------
 
+#: full-path override for the persistent cache file (wins over the dir env)
 AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-_DEFAULT_CACHE = os.path.join("artifacts", "autotune", "block_m.json")
+#: directory override: parallel CI jobs / subprocess tests point this at a
+#: private directory so concurrent runs never race on one shared JSON file
+TUNE_CACHE_DIR_ENV = "REPRO_TUNE_CACHE_DIR"
+_CACHE_BASENAME = "block_m.json"
+_DEFAULT_CACHE = os.path.join("artifacts", "autotune", _CACHE_BASENAME)
 #: tiling targets swept by the tuner; each maps to a *legal* divisor of M
 DEFAULT_BLOCK_TARGETS = (64, 128, 256, 512, 1024)
 
@@ -179,7 +184,13 @@ _tune_cache: Optional[dict] = None
 
 
 def _cache_path() -> str:
-    return os.environ.get(AUTOTUNE_CACHE_ENV, _DEFAULT_CACHE)
+    explicit = os.environ.get(AUTOTUNE_CACHE_ENV)
+    if explicit:
+        return explicit
+    cache_dir = os.environ.get(TUNE_CACHE_DIR_ENV)
+    if cache_dir:
+        return os.path.join(cache_dir, _CACHE_BASENAME)
+    return _DEFAULT_CACHE
 
 
 def _load_tune_cache() -> dict:
@@ -240,8 +251,10 @@ def tuned_block_m(
 
     ``measure(block_m) -> seconds`` runs the compiled kernel at one candidate
     tiling; the winner is persisted (``artifacts/autotune/block_m.json`` by
-    default, ``REPRO_AUTOTUNE_CACHE`` to relocate) so every later process
-    skips straight to the cached choice.  Without a ``measure`` callable —
+    default; ``REPRO_TUNE_CACHE_DIR`` relocates the directory — one private
+    dir per parallel CI job / subprocess test — and ``REPRO_AUTOTUNE_CACHE``
+    pins the full path) so every later process skips straight to the cached
+    choice.  Without a ``measure`` callable —
     or on the interpret/reference paths, where timing the emulation is noise —
     the deterministic ``pick_block_m`` divisor is returned.
 

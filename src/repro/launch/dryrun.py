@@ -26,6 +26,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SHAPES, ShapeSpec, TrainConfig, get_arch, supports_shape
+from repro.dist.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    layer_slice_pspecs,
+    opt_pspecs,
+    params_pspecs,
+    to_shardings,
+)
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model, input_specs
 from repro.optim import adamw_init, adamw_update, cosine_warmup
@@ -109,16 +117,6 @@ def _maybe_wkvchunk(cfg, variant):
 
 def lower_cell(arch: str, shape: ShapeSpec, mesh, mesh_name: str, variant: str = ""):
     """Lower+compile one cell; returns the artifact dict."""
-    # deferred: the sharding helpers live in an optional distribution package;
-    # importing this module (e.g. for parse_variant) must not require it.
-    from repro.dist.sharding import (
-        batch_pspecs,
-        cache_pspecs,
-        opt_pspecs,
-        params_pspecs,
-        to_shardings,
-    )
-
     opts = parse_variant(variant)
     model, cfg = build_model(arch, **opts["overrides"])
     if "wkvchunk" in variant:
@@ -150,8 +148,6 @@ def lower_cell(arch: str, shape: ShapeSpec, mesh, mesh_name: str, variant: str =
             grad_specs = o_specs["mu"] if opts["zero1"] else None
             layer_constraint = None
             if opts["fsdp"]:
-                from repro.dist.sharding import layer_slice_pspecs
-
                 layer_constraint = layer_slice_pspecs(params_spec["blocks"], mesh)
             step = make_train_step(model, tcfg, grad_mode=opts["grad_mode"],
                                    grad_specs=grad_specs,

@@ -27,7 +27,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default="", help="restore params from checkpoint dir")
+    ap.add_argument("--mesh", default="",
+                    help="'auto' or 'd,m': shard params/caches over a "
+                         "(data, model) mesh of the local devices")
     args = ap.parse_args()
+
+    from repro.launch.mesh import parse_mesh_arg
+
+    mesh = parse_mesh_arg(args.mesh)
 
     spec = get_arch(args.arch)
     model, cfg = build_model(spec.reduced if args.reduced else spec.config)
@@ -40,7 +47,7 @@ def main():
         print(f"restored step {step} from {args.ckpt}")
 
     engine = ServeEngine(model, params, max_len=args.prompt_len + args.max_new,
-                         temperature=args.temperature)
+                         temperature=args.temperature, mesh=mesh)
     prompt = {
         "tokens": jax.random.randint(
             rng, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32

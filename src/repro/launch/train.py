@@ -36,13 +36,24 @@ def main():
                     choices=["none", "topk", "int8"])
     ap.add_argument("--ckpt", default="checkpoints/train")
     ap.add_argument("--step-timeout", type=float, default=0.0)
+    ap.add_argument("--mesh", default="",
+                    help="'auto' (largest (data, model) factoring of the "
+                         "device count) or 'd,m'; empty = single-device")
     args = ap.parse_args()
+
+    from repro.launch.mesh import parse_mesh_arg
+
+    mesh = parse_mesh_arg(args.mesh)
 
     spec = get_arch(args.arch)
     cfg_model = spec.reduced if args.reduced else spec.config
     model, cfg = build_model(cfg_model)
+    mesh_desc = (
+        "x".join(map(str, mesh.devices.shape)) if mesh is not None else "none"
+    )
     print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
-          f"reversible={cfg.reversible} devices={jax.device_count()}")
+          f"reversible={cfg.reversible} devices={jax.device_count()} "
+          f"mesh={mesh_desc}")
 
     data = SyntheticTokens(cfg.vocab_size, args.seq, args.batch, seed=0)
     tcfg = TrainConfig(
@@ -50,7 +61,7 @@ def main():
         checkpoint_every=max(args.steps // 4, 10), checkpoint_dir=args.ckpt,
         grad_compression=args.grad_compression, step_timeout_s=args.step_timeout,
     )
-    res = train_lm(model, data, tcfg, grad_mode=args.grad_mode,
+    res = train_lm(model, data, tcfg, grad_mode=args.grad_mode, mesh=mesh,
                    log_every=max(args.steps // 10, 1))
     print(f"done at step {res.final_step}: loss {res.losses[0]:.4f} -> "
           f"{res.losses[-1]:.4f}; restarts={res.restarts}; "

@@ -1,10 +1,18 @@
-"""Batched serving engine: prefill + jitted decode loop.
+"""Batched serving engines: LM prefill + jitted decode loop, and
+batch-sharded flow sampling.
 
-Serves a fixed decode batch (the assignment's ``decode_*`` shapes): one
-prefill over the prompt populates the caches, then greedy/temperature
-decode steps append tokens.  The decode step is a single jitted function of
-(params, caches, tokens, pos) — the function the dry-run lowers for the
-decode cells.
+``ServeEngine`` serves a fixed LM decode batch (the assignment's
+``decode_*`` shapes): one prefill over the prompt populates the caches,
+then greedy/temperature decode steps append tokens.  The decode step is a
+single jitted function of (params, caches, tokens, pos) — the function the
+dry-run lowers for the decode cells.  With a ``mesh`` the params are
+model-sharded and the caches batch-sharded by the ``repro.dist`` rules
+before serving starts.
+
+``FlowServeEngine`` serves a normalizing flow: jitted ``sample`` /
+``log_prob`` whose batch axis is sharded over the mesh's data axes — the
+amortized-posterior-sampling scale-out path (paper §4: thousands of
+posterior draws per observation are embarrassingly batch-parallel).
 """
 
 from __future__ import annotations
@@ -16,8 +24,16 @@ import jax.numpy as jnp
 
 
 class ServeEngine:
-    def __init__(self, model, params, max_len: int, temperature: float = 0.0):
+    def __init__(self, model, params, max_len: int, temperature: float = 0.0,
+                 mesh=None):
         self.model = model
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.dist.sharding import params_pspecs, to_shardings
+
+            params = jax.device_put(
+                params, to_shardings(params_pspecs(params, mesh), mesh)
+            )
         self.params = params
         self.max_len = max_len
         self.temperature = temperature
@@ -43,6 +59,14 @@ class ServeEngine:
         rng = jax.random.PRNGKey(0) if rng is None else rng
         bsz, prompt_len = batch["tokens"].shape
         caches = self.model.make_caches(bsz, self.max_len)
+        if self.mesh is not None:
+            from repro.dist.flow import shard_batch
+            from repro.dist.sharding import cache_pspecs, to_shardings
+
+            caches = jax.device_put(
+                caches, to_shardings(cache_pspecs(caches, self.mesh), self.mesh)
+            )
+            batch = shard_batch(batch, self.mesh)
         logits, caches = self._prefill(self.params, batch, caches)
 
         extra = None
@@ -81,3 +105,54 @@ class ServeEngine:
                 self.params, tok[:, None], caches, jnp.asarray(pos + i, jnp.int32), extra
             )
         return jnp.stack(out_tokens, axis=1), logits
+
+
+class FlowServeEngine:
+    """Batch-sharded flow serving: ``sample`` / ``log_prob`` jitted once,
+    with every batch placed so its leading axis is split over the mesh's
+    data axes (GSPMD partitions the invertible graph; no collectives are
+    needed — flows are pointwise in the batch).
+
+    ``sample_flow``: optional inverse-optimized twin sharing ``flow``'s
+    parameters (e.g. a ``kernel_inverse=True`` build) — the same contract
+    as ``ConditionalFlow.sample_flow``.  Without a mesh this is just a
+    jit-caching convenience wrapper, so callers can be mesh-agnostic.
+    """
+
+    def __init__(self, flow, params, mesh=None, sample_flow=None):
+        self.flow = flow
+        self.sample_flow = sample_flow if sample_flow is not None else flow
+        self.params = params
+        self.mesh = mesh
+        self._log_prob = jax.jit(self._log_prob_impl)
+        self._sample = jax.jit(
+            lambda p, z, cond: self.sample_flow.inverse(p, z, cond)
+        )
+
+    def _log_prob_impl(self, params, x, cond):
+        from repro.core.distributions import std_normal_logpdf
+
+        z, logdet = self.flow.forward(params, x, cond)
+        return std_normal_logpdf(z) + logdet
+
+    def _place(self, *arrays):
+        from repro.dist.flow import shard_batch
+
+        return tuple(shard_batch(a, self.mesh) for a in arrays)
+
+    def log_prob(self, x, cond=None) -> jax.Array:
+        """Per-example log density, batch-sharded over the data axes."""
+        x, cond = self._place(x, cond)
+        return self._log_prob(self.params, x, cond)
+
+    def sample(self, rng, like, cond=None):
+        """Draws shaped like the batched latent prototype ``like`` (an array
+        or the tuple state of a multiscale flow — e.g. the ``z`` of a
+        forward pass), batch-sharded over the data axes.  ``cond`` must
+        already carry the same batch extent (repeat it per draw for
+        amortized posterior batches — ``ConditionalFlow.sample`` does)."""
+        from repro.core.distributions import std_normal_sample
+
+        z = std_normal_sample(rng, like)
+        z, cond = self._place(z, cond)
+        return self._sample(self.params, z, cond)

@@ -14,6 +14,7 @@ import json
 import os
 import shutil
 import tempfile
+import warnings
 
 import jax
 import numpy as np
@@ -22,6 +23,21 @@ import numpy as np
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return {jax.tree_util.keystr(k): np.asarray(jax.device_get(v)) for k, v in flat}
+
+
+def _mesh_meta_of(tree) -> dict | None:
+    """Mesh shape + axis names inferred from a tree of sharded arrays OR a
+    tree of ``Sharding`` objects (``None`` when nothing is mesh-sharded)."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        sharding = getattr(leaf, "sharding", leaf)
+        mesh = getattr(sharding, "mesh", None)
+        names = getattr(mesh, "axis_names", None)
+        if mesh is not None and names:
+            return {
+                "shape": [int(s) for s in mesh.devices.shape],
+                "axis_names": list(names),
+            }
+    return None
 
 
 def save(state, ckpt_dir: str, step: int, keep: int = 3) -> str:
@@ -36,6 +52,9 @@ def save(state, ckpt_dir: str, step: int, keep: int = 3) -> str:
             "keys": sorted(arrays.keys()),
             "shapes": {k: list(v.shape) for k, v in arrays.items()},
             "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            # provenance for elastic restarts: the mesh this state was laid
+            # out on (restore warns — never fails — on a different mesh)
+            "mesh": _mesh_meta_of(state),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -70,13 +89,30 @@ def restore(state_like, ckpt_dir: str, step: int | None = None, shardings=None):
 
     ``shardings``: optional pytree of ``jax.sharding.Sharding`` matching
     ``state_like`` — arrays are placed with the *new* sharding (elastic
-    restart on a different mesh)."""
+    restart on a different mesh).  A mesh-shape mismatch against the
+    checkpoint's recorded mesh is expected in that scenario and only
+    warned about."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     data = np.load(os.path.join(path, "arrays.npz"))
+
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            saved_mesh = json.load(f).get("mesh")
+    except (OSError, ValueError):
+        saved_mesh = None
+    new_mesh = _mesh_meta_of(shardings) if shardings is not None else None
+    if saved_mesh and new_mesh and saved_mesh != new_mesh:
+        warnings.warn(
+            f"checkpoint step {step} was written under mesh "
+            f"{saved_mesh['shape']} {saved_mesh['axis_names']}; restoring "
+            f"onto {new_mesh['shape']} {new_mesh['axis_names']} — arrays "
+            "will be re-laid-out (elastic restart)",
+            stacklevel=2,
+        )
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
     shard_flat = (

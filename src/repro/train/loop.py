@@ -5,10 +5,17 @@ Two front-ends over one supervised loop:
   * ``train_lm(model, ...)``    — LM training (the production path)
   * ``train_flow(flow, ...)``   — flow NLL training (the paper's native path)
 
+Both take an optional ``mesh``: the step is then jitted with explicit
+in/out shardings from ``repro.dist`` (batch over the data axes,
+params/moments model-sharded) and GSPMD inserts the gradient all-reduce —
+the loop body is unchanged.
+
 Fault-tolerance contract (tested): the loop can be killed at any step and
 restarted; it resumes from the latest checkpoint, and — because the data
 pipeline is a pure function of the step index — reproduces the exact same
-final state it would have reached uninterrupted.
+final state it would have reached uninterrupted.  With a mesh, restarting
+on a *different* mesh shape (elastic scaling) re-lays-out the restored
+state onto the new mesh.
 """
 
 from __future__ import annotations
@@ -43,8 +50,34 @@ class TrainResult:
     flagged_steps: tuple = ()
 
 
-def _make_step(loss_fn: Callable, cfg: TrainConfig):
-    """Build the jitted (state, batch, step) -> (state, metrics) update."""
+def _state_shardings(state, mesh):
+    """NamedSharding tree for a ``{"params", "opt", "err"}`` train state:
+    params model-sharded by the shared ``repro.dist`` rules, moments
+    mirroring them, error-feedback accumulators likewise (``None`` where
+    the param is an integer buffer)."""
+    from repro.dist.sharding import opt_pspecs, params_pspecs, to_shardings
+
+    p_specs = params_pspecs(state["params"], mesh)
+    o_specs = opt_pspecs(state["opt"], p_specs, mesh)
+    err_specs = jax.tree_util.tree_map(
+        lambda e, sp: None if e is None else sp,
+        state["err"],
+        p_specs,
+        is_leaf=lambda v: v is None,
+    )
+    return to_shardings(
+        {"params": p_specs, "opt": o_specs, "err": err_specs}, mesh
+    )
+
+
+def _make_step(loss_fn: Callable, cfg: TrainConfig, mesh=None, state=None,
+               batch=None):
+    """Build the jitted (state, batch, step) -> (state, metrics) update.
+
+    With a ``mesh`` the step is jitted with explicit in/out shardings —
+    batch split over the data axes, params/moments model-sharded — so the
+    same loop runs single-device or SPMD (GSPMD inserts the gradient
+    all-reduce); ``state``/``batch`` prototypes are required then."""
 
     def step_fn(state, batch, step):
         def lf(p):
@@ -63,7 +96,19 @@ def _make_step(loss_fn: Callable, cfg: TrainConfig):
         metrics = {"loss": loss, "lr": lr, **om, **aux}
         return {"params": params, "opt": opt, "err": new_err}, metrics
 
-    return jax.jit(step_fn, donate_argnums=(0,))
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0,))
+
+    from repro.dist.sharding import batch_pspecs, to_shardings
+
+    state_sh = _state_shardings(state, mesh)
+    batch_sh = to_shardings(batch_pspecs(batch, mesh), mesh)
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_sh, batch_sh, None),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
 
 
 def _supervised_loop(
@@ -72,10 +117,13 @@ def _supervised_loop(
     data_fn: Callable[[int], Any],
     cfg: TrainConfig,
     *,
+    mesh=None,
     injector: Optional[FailureInjector] = None,
     log_every: int = 0,
 ) -> TrainResult:
-    step_fn = _make_step(loss_fn, cfg)
+    # mesh-aware jit needs state/batch prototypes: built lazily on the first
+    # attempt (the jit cache carries it across restarts)
+    step_cache: dict = {"fn": None if mesh is not None else _make_step(loss_fn, cfg)}
     watchdog = (
         StragglerWatchdog(cfg.step_timeout_s) if cfg.step_timeout_s > 0 else None
     )
@@ -103,7 +151,12 @@ def _supervised_loop(
             }
             like["opt"] = adamw_init(like["params"])
             like["err"] = compression_init(like["params"])
-            state, start_step = ckpt.restore(like, cfg.checkpoint_dir)
+            # elastic restart: arrays land directly in the *current* mesh's
+            # layout, whatever mesh the checkpoint was written under
+            shardings = _state_shardings(like, mesh) if mesh is not None else None
+            state, start_step = ckpt.restore(
+                like, cfg.checkpoint_dir, shardings=shardings
+            )
             start_step += 1
         else:
             params = init_params_fn()
@@ -113,6 +166,13 @@ def _supervised_loop(
                 "err": compression_init(params),
             }
             start_step = 0
+        if mesh is not None:
+            state = jax.device_put(state, _state_shardings(state, mesh))
+            if step_cache["fn"] is None:
+                step_cache["fn"] = _make_step(
+                    loss_fn, cfg, mesh=mesh, state=state, batch=data_fn(start_step)
+                )
+        step_fn = step_cache["fn"]
 
         losses = []
         step = start_step
@@ -163,7 +223,7 @@ def _supervised_loop(
 
 
 def train_lm(model, data, cfg: TrainConfig, rng=None, grad_mode=None,
-             injector=None, log_every: int = 0) -> TrainResult:
+             mesh=None, injector=None, log_every: int = 0) -> TrainResult:
     rng = jax.random.PRNGKey(cfg.seed) if rng is None else rng
 
     def loss_fn(params, batch):
@@ -174,13 +234,14 @@ def train_lm(model, data, cfg: TrainConfig, rng=None, grad_mode=None,
         lambda: model.init(rng),
         lambda step: data.batch_at(step),
         cfg,
+        mesh=mesh,
         injector=injector,
         log_every=log_every,
     )
 
 
 def train_flow(flow, data, cfg: TrainConfig, example, rng=None, cond_fn=None,
-               injector=None, log_every: int = 0) -> TrainResult:
+               mesh=None, injector=None, log_every: int = 0) -> TrainResult:
     """``data.batch_at(step)`` returns x (or a dict with 'theta'/'y' for
     conditional flows via ``cond_fn(batch) -> (x, cond)``)."""
     rng = jax.random.PRNGKey(cfg.seed) if rng is None else rng
@@ -207,6 +268,7 @@ def train_flow(flow, data, cfg: TrainConfig, example, rng=None, cond_fn=None,
         init_fn,
         lambda step: data.batch_at(step),
         cfg,
+        mesh=mesh,
         injector=injector,
         log_every=log_every,
     )
