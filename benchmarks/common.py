@@ -64,3 +64,32 @@ def emit_json(name: str, payload: dict, out_dir: str = "artifacts/bench"):
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     return path
+
+
+NO_GATE_ENV = "REPRO_BENCH_NO_GATE"
+
+
+def load_gate_baseline(name: str, out_dir: str = "artifacts/bench"):
+    """Committed-baseline loader shared by the CI regression gates
+    (flow-training throughput, uq sampling throughput).
+
+    Returns ``(payload, "")`` when the gate should run, or ``(None, reason)``
+    when it must be skipped: ``REPRO_BENCH_NO_GATE=1`` (the intentional
+    re-baselining escape), a missing committed ``BENCH_<name>.json``, or a
+    baseline committed from a different backend (a CPU runner cannot gate
+    TPU numbers and vice versa)."""
+    if os.environ.get(NO_GATE_ENV):
+        return None, f"skipped ({NO_GATE_ENV})"
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    try:
+        with open(path) as f:
+            committed = json.load(f)
+    except OSError:
+        return None, f"no committed baseline at {path}; skipping"
+    backend = jax.default_backend()
+    if committed.get("backend") != backend:
+        return None, (
+            f"baseline backend {committed.get('backend')!r} != {backend!r};"
+            " skipping"
+        )
+    return committed, ""

@@ -140,25 +140,12 @@ def check_flow_training_regression(threshold: float = 0.15):
     every CI run uploads fresh per-run throughput/memory numbers.
     ``REPRO_BENCH_NO_GATE=1`` skips (e.g. while intentionally re-baselining).
     """
-    import json
-
+    from benchmarks.common import load_gate_baseline
     from benchmarks.flow_training import measure_modes
 
-    if os.environ.get("REPRO_BENCH_NO_GATE"):
-        print("flow-training gate: skipped (REPRO_BENCH_NO_GATE)")
-        return
-    path = os.path.join("artifacts", "bench", "BENCH_flow_training.json")
-    try:
-        with open(path) as f:
-            committed = json.load(f)
-    except OSError:
-        print(f"flow-training gate: no committed baseline at {path}; skipping")
-        return
-    if committed.get("backend") != jax.default_backend():
-        print(
-            f"flow-training gate: baseline backend {committed.get('backend')!r}"
-            f" != {jax.default_backend()!r}; skipping"
-        )
+    committed, reason = load_gate_baseline("flow_training")
+    if committed is None:
+        print(f"flow-training gate: {reason}")
         return
     rows = measure_modes(("coupled", "autodiff", "autodiff_scanned"), rounds=15)
     got = rows["coupled"]["imgs_per_s"]

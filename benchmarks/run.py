@@ -5,6 +5,7 @@
 #   flow training throughput     -> benchmarks.flow_training
 #   reversible-LM throughput     -> benchmarks.lm_throughput
 #   kernel correctness/latency   -> benchmarks.kernels_bench
+#   UQ posterior streaming/SBC   -> benchmarks.uq_bench
 #   roofline table (deliverable g, reads dry-run artifacts)
 #                                -> benchmarks.roofline_table
 import sys
@@ -18,6 +19,7 @@ def main() -> None:
         memory_vs_depth,
         memory_vs_size,
         roofline_table,
+        uq_bench,
     )
 
     print("name,us_per_call,derived")
@@ -28,6 +30,7 @@ def main() -> None:
         "flow": flow_training,
         "lm": lm_throughput,
         "kernels": kernels_bench,
+        "uq": uq_bench,
         "roofline": roofline_table,
     }
     for name, mod in mods.items():

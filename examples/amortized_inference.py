@@ -1,70 +1,55 @@
 """Amortized Bayesian inference with a conditional flow (paper §4).
 
-A conditional HINT flow + summary network (the BayesFlow pattern) is trained
-on a linear-Gaussian inverse problem whose posterior is known analytically —
-so the learned posterior can be *checked*, not just eyeballed:
+Runs the ``lg-posterior`` scenario from the ``repro.uq`` registry — a
+conditional HINT flow + summary network (the BayesFlow pattern) trained on a
+linear-Gaussian inverse problem whose posterior is known analytically, so
+the learned posterior can be *checked*, not just eyeballed:
 
     theta ~ N(0, I),  y = A theta + sigma eps
     =>  theta | y  ~  N(mu(y), Sigma)   (closed form)
 
+The example is a thin driver over the scenario registry (the same recipe
+``repro.launch.train --scenario lg-posterior`` runs), so the example and
+the subsystem cannot drift: training goes through the fault-tolerant loop,
+posterior statistics stream through ``PosteriorEngine`` without ever
+materializing the draw cloud, and the SBC/coverage calibration report
+closes the loop.
+
     PYTHONPATH=src python examples/amortized_inference.py
 """
 
+import tempfile
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import TrainConfig
-from repro.core import ConditionalFlow, SummaryMLP, build_chint
-from repro.data import SyntheticInverseProblem
-from repro.optim import adamw_init, adamw_update, cosine_warmup
+from repro.uq import posterior_report, train_scenario
 
 
-def main(steps: int = 600):
-    rng = jax.random.PRNGKey(0)
-    prob = SyntheticInverseProblem(d_theta=8, d_y=16, sigma=0.5, batch=256)
-    # training through the fused reversible backward (every HINT cross-
-    # coupling conditioner evaluated once per backward, EXPERIMENTS.md
-    # §Perf/H1); sampling through the kernel-backed inverse twin, which
-    # shares the same parameter pytree.
-    flow = build_chint(depth=3, recursion=2, hidden=64, grad_mode="coupled")
-    sample_flow = build_chint(depth=3, recursion=2, hidden=64, kernel_inverse=True)
-    model = ConditionalFlow(flow, SummaryMLP(d_out=32, hidden=64), sample_flow=sample_flow)
-
-    b0 = prob.batch_at(0)
-    params = model.init(rng, b0["theta"], b0["y"])
-    tcfg = TrainConfig(steps=steps, lr=2e-3, warmup_steps=30)
-    opt = adamw_init(params)
-
-    @jax.jit
-    def step(params, opt, batch, i):
-        loss, grads = jax.value_and_grad(
-            lambda p: model.loss(p, batch["theta"], batch["y"]), allow_int=True
-        )(params)
-        lr = cosine_warmup(i, tcfg.lr, tcfg.warmup_steps, tcfg.steps)
-        params, opt, _ = adamw_update(params, grads, opt, tcfg, lr)
-        return params, opt, loss
-
-    for i in range(steps):
-        params, opt, loss = step(params, opt, prob.batch_at(i), jnp.asarray(i))
-        if i % 150 == 0 or i == steps - 1:
-            print(f"step {i:4d}  posterior nll/dim {float(loss):.4f}")
+def main(steps: int | None = None):
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        run = train_scenario("lg-posterior", steps=steps, ckpt_dir=ckpt_dir,
+                             log_every=150)
+    problem = run.problem
 
     # --- validate against the analytic posterior on one observation -------
-    test = prob.batch_at(10_000)
-    y_obs = test["y"][:1]
-    mu, cov = prob.posterior(y_obs[0])
-    samples = model.sample(params, rng, y_obs, n=4000, theta_dim=8)
-    emp_mu = np.asarray(jnp.mean(samples, 0))
-    emp_sd = np.asarray(jnp.std(samples, 0))
+    y_obs = problem.batch_at(10_000)["y"][:1]
+    mu, cov = problem.posterior(y_obs[0])
+    stats, report = posterior_report(
+        run, y_obs=y_obs, key=jax.random.PRNGKey(0),
+        n_samples=20_000, chunk=4000,
+    )
     ana_sd = np.sqrt(np.diag(np.asarray(cov)))
-    mu_err = float(np.max(np.abs(emp_mu - np.asarray(mu))))
-    sd_ratio = emp_sd / ana_sd
+    mu_err = float(np.max(np.abs(stats.mean - np.asarray(mu))))
+    sd_ratio = stats.std / ana_sd
+    print(stats.summary())
     print("posterior mean abs err (max over dims):", round(mu_err, 3))
     print("posterior std ratio (flow/analytic):", np.round(sd_ratio, 2))
+    print(report.summary())
     assert mu_err < 0.35, "amortized posterior mean should match analytic"
     assert np.all(sd_ratio > 0.5) and np.all(sd_ratio < 2.0)
-    print("OK — amortized posterior matches the analytic linear-Gaussian posterior")
+    print("OK — amortized posterior matches the analytic linear-Gaussian "
+          "posterior (streamed, never materialized)")
 
 
 if __name__ == "__main__":

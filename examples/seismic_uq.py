@@ -1,0 +1,78 @@
+"""Reliability-aware seismic-style inversion with an amortized flow posterior.
+
+The ``seismic-uq`` scenario (repro.uq registry): a reflectivity trace is
+observed through a band-limited Ricker-wavelet convolution — the textbook
+post-stack seismic forward model, the 1-D core of Siahkoohi & Herrmann
+(2021, "Learning by example: fast reliability-aware seismic imaging with
+normalizing flows").  Band-limitation destroys low/high frequencies, so the
+posterior's uncertainty is strongly structured — exactly what the credible
+maps should show.
+
+The workflow is the paper's application loop end-to-end:
+
+  1. train a conditional HINT flow on simulated (reflectivity, trace) pairs
+     through the fused coupled backward;
+  2. stream 20k posterior draws for a held-out trace through
+     ``PosteriorEngine`` (kernel-backed inverse, O(chunk) memory);
+  3. print the uncertainty map — posterior mean next to the 90% credible
+     width per sample position — plus the analytic reference (the operator
+     is linear-Gaussian, so the truth is available);
+  4. run the SBC/coverage calibration report.
+
+    PYTHONPATH=src python examples/seismic_uq.py [--steps 1000]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.uq import get_scenario, posterior_report, train_scenario
+
+
+def ascii_map(values, width: int = 40) -> str:
+    """One-line bar chart per entry — uncertainty maps without matplotlib."""
+    v = np.asarray(values, np.float64)
+    scale = width / max(float(v.max()), 1e-9)
+    return "\n".join(
+        f"  [{i:3d}] {'#' * max(int(x * scale), 1)} {x:.3f}"
+        for i, x in enumerate(v)
+    )
+
+
+def main(steps: int | None = None):
+    sc = get_scenario("seismic-uq")
+    print(f"scenario: {sc.name} — {sc.note}")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        run = train_scenario(sc, steps=steps, ckpt_dir=ckpt_dir, log_every=200)
+    problem = run.problem
+
+    y_obs = problem.batch_at(10_000)["y"][:1]
+    stats, report = posterior_report(run, y_obs=y_obs,
+                                     key=jax.random.PRNGKey(0))
+
+    # analytic reference: the operator is linear, so the exact posterior
+    # std is available — the learned map should reproduce its structure
+    _, cov = problem.posterior(y_obs[0])
+    ana_sd = np.sqrt(np.diag(np.asarray(cov)))
+
+    lo, hi = stats.intervals[0.9]
+    print("\nposterior 90% credible width per reflectivity sample "
+          "(flow, streamed):")
+    print(ascii_map(hi - lo))
+    print("\nanalytic posterior std (reference structure):")
+    print(ascii_map(ana_sd))
+    corr = float(np.corrcoef(hi - lo, ana_sd)[0, 1])
+    print(f"\nwidth-vs-analytic-std correlation: {corr:.3f}")
+    print(stats.summary())
+    print(report.summary())
+    assert np.all(np.isfinite(stats.mean))
+    print("OK — seismic UQ pipeline complete")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=0,
+                    help="override the scenario's training steps")
+    main(ap.parse_args().steps or None)

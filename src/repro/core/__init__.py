@@ -13,6 +13,7 @@ from repro.core.conditional import ConditionalFlow, SummaryMLP, build_chint
 from repro.core.conv1x1 import Conv1x1
 from repro.core.coupling import AffineCoupling
 from repro.core.distributions import (
+    derive_key,
     flatten_state,
     std_normal_logpdf,
     std_normal_sample,
@@ -32,7 +33,7 @@ __all__ = [
     "HINTCoupling", "HaarSqueeze", "HyperbolicLayer", "Invertible",
     "InvertibleChain", "OnFirst", "Pack", "Split", "Squeeze", "SummaryMLP",
     "amortized_vi_loss", "build_chint", "build_glow", "build_glow_scanned",
-    "build_hyperbolic", "build_realnvp",
+    "build_hyperbolic", "build_realnvp", "derive_key",
     "flatten_state", "make_chain_apply", "make_scan_apply",
     "nll_bits_per_dim", "nll_loss", "std_normal_logpdf", "std_normal_sample",
     "value_and_grad_nll",

@@ -15,7 +15,11 @@ import jax.numpy as jnp
 from repro.core.actnorm import ActNorm
 from repro.core.chain import InvertibleChain
 from repro.core.conv1x1 import Conv1x1
-from repro.core.distributions import std_normal_logpdf, std_normal_sample
+from repro.core.distributions import (
+    derive_key,
+    std_normal_logpdf,
+    std_normal_sample,
+)
 from repro.core.hint import HINTCoupling
 from repro.core.objectives import nll_loss
 from repro.nn.nets import CouplingMLP
@@ -82,13 +86,30 @@ class ConditionalFlow:
     the data axes (``repro.dist``), so amortized posterior sampling (the
     n-times-repeated-``cond`` wide batch) scales across devices.  Batches
     whose extent doesn't divide the data axes fall back to replication.
+
+    ``cond_adapter``: optional hook mapping the summary output (B, d_cond)
+    to whatever the flow's conditioners consume — e.g. a spatial broadcast
+    to (B, H, W, d_cond) for image (CouplingCNN) flows.  Applied everywhere
+    ``cond`` is computed, including ``init``.
+
+    RNG contract: every sampling method derives its latent key by
+    split-and-fold (:func:`repro.core.distributions.derive_key`), so the
+    same user key is bit-reproducible across calls and mesh shapes, and
+    ``sample`` / ``sample_like`` consume independent streams from one key.
     """
 
+    # split-and-fold stream tags (see `derive_key`): `sample` and
+    # `sample_like` must not alias when handed the same user key
+    _TAG_SAMPLE = 0
+    _TAG_SAMPLE_LIKE = 1
+
     def __init__(self, flow: InvertibleChain, summary: SummaryMLP | None = None,
-                 sample_flow: InvertibleChain | None = None, mesh=None):
+                 sample_flow: InvertibleChain | None = None, mesh=None,
+                 cond_adapter=None):
         self.flow = flow
         self.summary = summary
         self.mesh = mesh
+        self.cond_adapter = cond_adapter
         if sample_flow is not None:
             # the twin consumes `params["flow"]` verbatim, and a chain's
             # inverse would silently zip-truncate a mismatched params tuple —
@@ -107,16 +128,15 @@ class ConditionalFlow:
         params = {}
         if self.summary is not None:
             params["summary"] = self.summary.init(ks, y.reshape(y.shape[0], -1).shape[-1])
-            cond = self.summary.apply(params["summary"], y)
-        else:
-            cond = y
+        cond = self._cond(params, y)
         params["flow"] = self.flow.init(kf, theta, cond=cond)
         return params
 
     def _cond(self, params, y):
-        if self.summary is None:
-            return y
-        return self.summary.apply(params["summary"], y)
+        cond = y if self.summary is None else self.summary.apply(params["summary"], y)
+        if self.cond_adapter is not None:
+            cond = self.cond_adapter(cond)
+        return cond
 
     def _place(self, *arrays):
         """Batch-shard arrays over the mesh's data axes (no-op without a
@@ -137,6 +157,12 @@ class ConditionalFlow:
         cond = self._cond(params, y)
         return nll_loss(self.flow, params["flow"], theta, cond)
 
+    def train_loss(self, params, batch):
+        """Amortized-objective hook for the supervised training loop
+        (``repro.train.train_conditional_flow``): ``batch`` is the
+        ``{"theta", "y"}`` dict the inverse-problem data sources emit."""
+        return self.loss(params, batch["theta"], batch["y"]), {}
+
     def sample(self, params, rng, y, n: int, theta_dim: int):
         """n posterior samples per observation (y broadcast over samples).
 
@@ -145,14 +171,48 @@ class ConditionalFlow:
         ``kernel_inverse=True`` twin when one was provided) in a single
         kernel-backed inverse call rather than the plain inverse.  With a
         ``mesh`` the repeated batch is sharded over the data axes first."""
-        cond = self._cond(params, y)
-        cond = jnp.repeat(cond, n, axis=0)
-        z = jax.random.normal(rng, (cond.shape[0], theta_dim))
-        z, cond = self._place(z, cond)
-        return self.sample_flow.inverse(params["flow"], z, cond)
+        return self.posterior_sampler(params, y, theta_dim=theta_dim)(rng, n)
 
     def sample_like(self, params, rng, y, theta_like):
         cond = self._cond(params, y)
-        z = std_normal_sample(rng, theta_like)
+        z = std_normal_sample(derive_key(rng, self._TAG_SAMPLE_LIKE), theta_like)
         z, cond = self._place(z, cond)
         return self.sample_flow.inverse(params["flow"], z, cond)
+
+    def posterior_sampler(self, params, y, *, theta_dim: int | None = None,
+                          theta_like=None):
+        """Keyed amortized-sampling hook: ``draw(key, n)`` -> n posterior
+        samples per observation in ``y``.
+
+        The conditioning ``summary(y)`` is computed once at construction and
+        reused for every draw — the repeated work in a streaming posterior
+        accumulation (``repro.uq.PosteriorEngine``) is only the wide inverse.
+        ``theta_dim`` covers flat (B, D) parameter flows; ``theta_like`` is a
+        single-sample latent prototype (array or multiscale tuple — arrays or
+        ``ShapeDtypeStruct``s with the sample axis first) for image flows.
+        Draws follow the `derive_key` contract: the same ``(key, n)`` is
+        bit-identical across calls and mesh shapes, and ``draw(key, n)``
+        equals ``sample(params, key, y, n, theta_dim)``.
+        """
+        if (theta_dim is None) == (theta_like is None):
+            raise ValueError("pass exactly one of theta_dim / theta_like")
+        cond0 = self._cond(params, y)
+        n_obs = cond0.shape[0]
+
+        def draw(key, n: int):
+            cond = jnp.repeat(cond0, n, axis=0)
+            zkey = derive_key(key, self._TAG_SAMPLE)
+            if theta_like is not None:
+                proto = jax.tree_util.tree_map(
+                    lambda v: jax.ShapeDtypeStruct(
+                        (n * n_obs,) + tuple(v.shape[1:]), v.dtype
+                    ),
+                    theta_like,
+                )
+                z = std_normal_sample(zkey, proto)
+            else:
+                z = jax.random.normal(zkey, (cond.shape[0], theta_dim))
+            z, cond = self._place(z, cond)
+            return self.sample_flow.inverse(params["flow"], z, cond)
+
+        return draw

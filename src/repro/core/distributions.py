@@ -22,8 +22,33 @@ def std_normal_logpdf(z) -> jax.Array:
 
 
 def std_normal_sample(rng, like) -> jax.Array:
-    """Sample a latent pytree matching the structure/shapes of ``like``."""
+    """Sample a latent pytree matching the structure/shapes of ``like``.
+
+    ``like`` may hold arrays or ``jax.ShapeDtypeStruct``s (only shape/dtype
+    are read), so latent prototypes can come from ``jax.eval_shape``."""
     leaves, treedef = jax.tree_util.tree_flatten(like)
     keys = jax.random.split(rng, len(leaves))
     samples = [jax.random.normal(k, v.shape, v.dtype) for k, v in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, samples)
+
+
+def derive_key(key, tag: int) -> jax.Array:
+    """Split-and-fold key derivation for sampling streams.
+
+    Every sampling entry point derives its latent-noise key as
+    ``fold_in(split(key)[1], tag)`` instead of consuming the caller's key
+    directly, which makes the drawn noise
+
+    * **bit-identical across calls** — the same ``(key, tag)`` always yields
+      the same stream, regardless of what else the caller did with ``key``
+      (the raw key is never consumed, so caller-side reuse cannot collide
+      with an internal stream);
+    * **bit-identical across mesh shapes** — the noise is generated at full
+      batch extent *before* any sharded placement, and
+      ``jax_threefry_partitionable`` keeps generation layout-invariant, so
+      single-device and batch-sharded sampling agree bitwise;
+    * **stream-separated** — distinct ``tag``s (e.g. per sampling method, or
+      per chunk of a streaming accumulation) give independent draws from one
+      user-visible key.
+    """
+    return jax.random.fold_in(jax.random.split(key, 2)[1], tag)

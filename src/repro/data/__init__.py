@@ -4,4 +4,54 @@ from repro.data.synthetic import (
     SyntheticTokens,
 )
 
-__all__ = ["SyntheticImages", "SyntheticInverseProblem", "SyntheticTokens"]
+# Step-indexed dataset registry.  Every factory returns an object with the
+# ``batch_at(step, shard, n_shards)`` contract (a pure function of
+# (seed, step, shard) — the fault-tolerance/restart guarantee).  The
+# ``repro.uq`` operator problems register here lazily so importing
+# ``repro.data`` never pulls the UQ subsystem in.
+_BUILTIN_DATASETS = {
+    "tokens": SyntheticTokens,
+    "images": SyntheticImages,
+    "linear_gaussian_legacy": SyntheticInverseProblem,
+}
+
+
+def _operator_problem(op_name: str):
+    def factory(batch: int = 256, seed: int = 0, **op_kw):
+        from repro.uq.operators import make_operator
+
+        return make_operator(op_name, **op_kw).problem(batch=batch, seed=seed)
+
+    factory.__name__ = f"{op_name}_problem"
+    return factory
+
+
+DATASETS = {
+    **_BUILTIN_DATASETS,
+    # synthetic Bayesian inverse problems (repro.uq.operators): each yields
+    # {"theta", "y"} joint draws with an analytic posterior attached
+    "linear_gaussian": _operator_problem("linear_gaussian"),
+    "blur": _operator_problem("blur"),
+    "mask_tomo": _operator_problem("mask_tomo"),
+    "seismic": _operator_problem("seismic"),
+}
+
+
+def make_dataset(name: str, **kw):
+    """Instantiate a registered step-indexed data source by name."""
+    try:
+        factory = DATASETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown dataset {name!r}; registered: {sorted(DATASETS)}"
+        ) from None
+    return factory(**kw)
+
+
+__all__ = [
+    "DATASETS",
+    "SyntheticImages",
+    "SyntheticInverseProblem",
+    "SyntheticTokens",
+    "make_dataset",
+]

@@ -12,7 +12,14 @@ Two ways to scale a normalizing flow across a mesh's data axes:
 * :func:`shard_batch` — GSPMD placement: ``device_put`` a batch with its
   leading axis sharded and let ``jax.jit`` partition the (custom-VJP-free)
   ``sample`` / ``log_prob`` graphs — the amortized-posterior-sampling path
-  used by ``ConditionalFlow`` and ``serve.FlowServeEngine``.
+  used by ``ConditionalFlow``, ``serve.FlowServeEngine``, and (chunk by
+  chunk) ``repro.uq.PosteriorEngine``'s streaming accumulation.
+
+Mesh-parity invariant the streaming-UQ layer builds on: latent noise is
+always generated at full batch extent *before* :func:`shard_batch`
+placement (see ``core.distributions.derive_key``), so the samples — and
+any statistics accumulated over them — agree across mesh shapes to
+compilation-level tolerance (pinned ≤ 1e-4 by ``tests/test_uq.py``).
 """
 
 from __future__ import annotations

@@ -145,14 +145,23 @@ class FlowServeEngine:
         x, cond = self._place(x, cond)
         return self._log_prob(self.params, x, cond)
 
+    # split-and-fold stream tag (`repro.core.distributions.derive_key`);
+    # matches ConditionalFlow._TAG_SAMPLE so the two engines' draws from the
+    # same user key describe the same latent stream
+    _TAG_SAMPLE = 0
+
     def sample(self, rng, like, cond=None):
         """Draws shaped like the batched latent prototype ``like`` (an array
         or the tuple state of a multiscale flow — e.g. the ``z`` of a
-        forward pass), batch-sharded over the data axes.  ``cond`` must
-        already carry the same batch extent (repeat it per draw for
-        amortized posterior batches — ``ConditionalFlow.sample`` does)."""
-        from repro.core.distributions import std_normal_sample
+        forward pass, or its ``jax.eval_shape``), batch-sharded over the
+        data axes.  ``cond`` must already carry the same batch extent
+        (repeat it per draw for amortized posterior batches —
+        ``ConditionalFlow.sample`` does).
 
-        z = std_normal_sample(rng, like)
+        The latent key is derived split-and-fold (``derive_key``): the same
+        ``rng`` is bit-reproducible across calls and mesh shapes."""
+        from repro.core.distributions import derive_key, std_normal_sample
+
+        z = std_normal_sample(derive_key(rng, self._TAG_SAMPLE), like)
         z, cond = self._place(z, cond)
         return self._sample(self.params, z, cond)

@@ -1,5 +1,10 @@
 from repro.train.checkpoint import latest_step, restore, save
-from repro.train.loop import TrainResult, train_flow, train_lm
+from repro.train.loop import (
+    TrainResult,
+    train_conditional_flow,
+    train_flow,
+    train_lm,
+)
 from repro.train.fault import FailureInjector, StragglerWatchdog
 
 __all__ = [
@@ -9,6 +14,7 @@ __all__ = [
     "latest_step",
     "restore",
     "save",
+    "train_conditional_flow",
     "train_flow",
     "train_lm",
 ]

@@ -240,6 +240,27 @@ def train_lm(model, data, cfg: TrainConfig, rng=None, grad_mode=None,
     )
 
 
+def train_conditional_flow(model, data, cfg: TrainConfig, rng=None, mesh=None,
+                           injector=None, log_every: int = 0) -> TrainResult:
+    """Amortized posterior training (``repro.uq``): ``model`` is a
+    ``ConditionalFlow`` (its ``train_loss`` hook is the objective) and
+    ``data.batch_at(step)`` yields ``{"theta", "y"}`` joint draws — e.g. an
+    operator problem from ``repro.uq.operators``.  Full supervised-loop
+    contract: checkpoints, restarts, mesh sharding."""
+    rng = jax.random.PRNGKey(cfg.seed) if rng is None else rng
+    b0 = data.batch_at(0)
+
+    return _supervised_loop(
+        lambda params, batch: model.train_loss(params, batch),
+        lambda: model.init(rng, b0["theta"], b0["y"]),
+        lambda step: data.batch_at(step),
+        cfg,
+        mesh=mesh,
+        injector=injector,
+        log_every=log_every,
+    )
+
+
 def train_flow(flow, data, cfg: TrainConfig, example, rng=None, cond_fn=None,
                mesh=None, injector=None, log_every: int = 0) -> TrainResult:
     """``data.batch_at(step)`` returns x (or a dict with 'theta'/'y' for

@@ -1,0 +1,51 @@
+# Uncertainty quantification: the paper's application layer.  Amortized
+# posterior inference over synthetic inverse problems (operators), streaming
+# posterior statistics that never materialize the sample cloud (posterior),
+# simulation-based calibration (calibration), and the named end-to-end
+# scenario registry the launchers/examples run (scenarios).
+from repro.uq.calibration import (
+    CalibrationReport,
+    analytic_posterior_sampler,
+    calibrate,
+    chi2_sf,
+    coverage_curve,
+    rank_histogram,
+    sbc_ranks,
+    uniformity_pvalues,
+)
+from repro.uq.operators import (
+    OPERATORS,
+    BlurOperator,
+    ForwardOperator,
+    LinearGaussianOperator,
+    MaskTomographyOperator,
+    OperatorProblem,
+    SeismicConvOperator,
+    make_operator,
+)
+from repro.uq.posterior import (
+    PosteriorEngine,
+    PosteriorStats,
+    QuantileSketch,
+    StreamingMoments,
+)
+from repro.uq.scenarios import (
+    SCENARIOS,
+    ScenarioRun,
+    UQScenario,
+    get_scenario,
+    posterior_report,
+    restore_scenario,
+    train_scenario,
+)
+
+__all__ = [
+    "OPERATORS", "SCENARIOS",
+    "BlurOperator", "CalibrationReport", "ForwardOperator",
+    "LinearGaussianOperator", "MaskTomographyOperator", "OperatorProblem",
+    "PosteriorEngine", "PosteriorStats", "QuantileSketch", "ScenarioRun",
+    "SeismicConvOperator", "StreamingMoments", "UQScenario",
+    "analytic_posterior_sampler", "calibrate", "chi2_sf", "coverage_curve",
+    "get_scenario", "make_operator", "posterior_report", "rank_histogram",
+    "restore_scenario", "sbc_ranks", "train_scenario", "uniformity_pvalues",
+]

@@ -1,0 +1,292 @@
+"""Named UQ scenarios: operator x flow config x training recipe.
+
+A scenario is everything needed to reproduce one uncertainty-quantification
+workflow end-to-end — which forward operator, which flow architecture (the
+``repro.configs.flows`` families: cHINT for conditional posterior flows,
+GLOW_COUPLED / GLOW_SCANNED for image priors), and the training recipe —
+runnable from the launchers::
+
+    PYTHONPATH=src python -m repro.launch.train --scenario lg-smoke --ckpt ckpt/uq
+    PYTHONPATH=src python -m repro.launch.serve --scenario lg-smoke --ckpt ckpt/uq
+
+and importable by the examples/benchmarks (``examples/amortized_inference.py``
+and ``examples/seismic_uq.py`` are thin drivers over this registry, so the
+examples and the subsystem cannot drift).
+
+Two scenario kinds:
+
+* **conditional** (``operator`` set) — amortized posterior inference: a
+  conditional HINT flow + summary net trained on the operator's simulated
+  ``(theta, y)`` stream, then ``PosteriorEngine`` streaming statistics and
+  the SBC/coverage calibration report;
+* **prior** (``operator`` None) — an unconditional image flow (the glow
+  families) trained on ``SyntheticImages``: the learned-prior half of
+  imaging UQ, served as batch-sharded sample statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+
+from repro.config import TrainConfig
+from repro.configs.flows import (
+    CHINT_COUPLED,
+    CHINT_POSTERIOR,
+    GLOW_COUPLED,
+    GLOW_SCANNED,
+    FlowConfig,
+    build_flow,
+)
+
+
+@dataclass(frozen=True)
+class UQScenario:
+    name: str
+    # conditional scenarios: a registered repro.uq.operators name (+kwargs);
+    # prior scenarios: None (trained on SyntheticImages of `image_size`)
+    operator: Optional[str]
+    flow: FlowConfig
+    operator_kw: tuple = ()           # sorted (key, value) pairs
+    recursion: int = 2                # cHINT recursion depth
+    summary_dim: int = 32
+    summary_hidden: int = 64
+    image_size: int = 16              # prior scenarios
+    # training recipe
+    steps: int = 300
+    lr: float = 2e-3
+    batch: int = 256
+    # serving / calibration defaults
+    n_posterior: int = 20_000
+    chunk: int = 2048
+    sbc_sims: int = 128
+    sbc_draws: int = 64
+    note: str = ""
+
+    @property
+    def conditional(self) -> bool:
+        return self.operator is not None
+
+    def make_operator(self):
+        from repro.uq.operators import make_operator
+
+        return make_operator(self.operator, **dict(self.operator_kw))
+
+    def make_problem(self, seed: int = 0):
+        return self.make_operator().problem(batch=self.batch, seed=seed)
+
+
+def _kw(**kw) -> tuple:
+    return tuple(sorted(kw.items()))
+
+
+SCENARIOS = {
+    s.name: s
+    for s in (
+        # tiny end-to-end pipeline for CI: trains in seconds on CPU, loose
+        # posterior but exercises train -> stream -> calibrate
+        UQScenario(
+            name="lg-smoke",
+            operator="linear_gaussian",
+            operator_kw=_kw(d_theta=4, d_y=8, sigma=0.5),
+            flow=dataclasses.replace(CHINT_COUPLED, depth=2, hidden=32),
+            recursion=1, summary_dim=16, summary_hidden=32,
+            steps=50, batch=128, n_posterior=4096, chunk=1024,
+            sbc_sims=64, sbc_draws=64,
+            note="CI smoke: 50-step train + SBC on 64 draws",
+        ),
+        # the reference problem (examples/amortized_inference.py): analytic
+        # posterior available, so the amortized one is checked, not eyeballed
+        UQScenario(
+            name="lg-posterior",
+            operator="linear_gaussian",
+            operator_kw=_kw(d_theta=8, d_y=16, sigma=0.5),
+            flow=dataclasses.replace(CHINT_COUPLED, depth=3, hidden=64),
+            recursion=2, summary_dim=32, summary_hidden=64,
+            steps=600, batch=256,
+            note="linear-Gaussian amortized posterior vs analytic",
+        ),
+        # same problem on the paper-generic invertible engine (no fused
+        # kernels) — the conformance pairing for the coupled recipe above
+        UQScenario(
+            name="lg-posterior-invertible",
+            operator="linear_gaussian",
+            operator_kw=_kw(d_theta=8, d_y=16, sigma=0.5),
+            flow=dataclasses.replace(CHINT_POSTERIOR, depth=3, hidden=64),
+            recursion=2, summary_dim=32, summary_hidden=64,
+            steps=600, batch=256,
+            note="grad_mode=invertible twin of lg-posterior",
+        ),
+        UQScenario(
+            name="deconv-blur",
+            operator="blur",
+            operator_kw=_kw(size=16, width=1.5, sigma=0.05),
+            flow=dataclasses.replace(CHINT_COUPLED, depth=4, hidden=64),
+            recursion=2, summary_dim=32, summary_hidden=64,
+            steps=800, batch=256,
+            note="1-D Gaussian deconvolution (smooth ill-posed operator)",
+        ),
+        UQScenario(
+            name="tomo-mask",
+            operator="mask_tomo",
+            operator_kw=_kw(d_theta=16, n_meas=24, keep=0.4, sigma=0.1),
+            flow=dataclasses.replace(CHINT_COUPLED, depth=4, hidden=96),
+            recursion=2, summary_dim=48, summary_hidden=96,
+            steps=800, batch=256,
+            note="randomized-mask tomography (sparse-view stand-in)",
+        ),
+        UQScenario(
+            name="seismic-uq",
+            operator="seismic",
+            operator_kw=_kw(size=32, f0=0.15, sigma=0.02),
+            flow=dataclasses.replace(CHINT_COUPLED, depth=4, hidden=128),
+            recursion=2, summary_dim=64, summary_hidden=128,
+            steps=1000, batch=256,
+            note="band-limited seismic trace inversion with credible maps",
+        ),
+        # learned image priors (the other half of imaging UQ) on the two
+        # glow fast paths — trained with train_flow, served as batch-sharded
+        # sample statistics
+        UQScenario(
+            name="images-prior-scanned",
+            operator=None,
+            flow=GLOW_SCANNED,
+            image_size=16, steps=300, batch=8,
+            note="scan-compiled GLOW image prior (megakernel fast path)",
+        ),
+        UQScenario(
+            name="images-prior-coupled",
+            operator=None,
+            flow=dataclasses.replace(GLOW_COUPLED, k_steps=4),
+            image_size=16, steps=300, batch=8,
+            note="unrolled coupled GLOW image prior (reference path)",
+        ),
+    )
+}
+
+
+def get_scenario(name: str) -> UQScenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}"
+        ) from None
+
+
+@dataclass
+class ScenarioRun:
+    """A trained scenario: everything serving/calibration needs."""
+
+    scenario: UQScenario
+    model: Any          # ConditionalFlow (conditional) or InvertibleChain
+    params: Any
+    problem: Any = None  # OperatorProblem (conditional scenarios)
+    result: Any = None   # TrainResult
+
+
+def build_conditional_model(sc: UQScenario, mesh=None):
+    """The scenario's ConditionalFlow: training flow on the scenario's
+    grad_mode, sampling twin through the fused Pallas inverse kernels."""
+    from repro.core import ConditionalFlow, SummaryMLP, build_chint
+
+    cfg = sc.flow
+    flow = build_chint(depth=cfg.depth, recursion=sc.recursion,
+                       hidden=cfg.hidden, grad_mode=cfg.grad_mode)
+    sample_flow = build_chint(depth=cfg.depth, recursion=sc.recursion,
+                              hidden=cfg.hidden, kernel_inverse=True)
+    summary = SummaryMLP(d_out=sc.summary_dim, hidden=sc.summary_hidden)
+    return ConditionalFlow(flow, summary, sample_flow=sample_flow, mesh=mesh)
+
+
+def train_scenario(name_or_sc, *, steps: int | None = None, mesh=None,
+                   ckpt_dir: str = "checkpoints/uq", seed: int = 0,
+                   log_every: int = 0) -> ScenarioRun:
+    """Train a scenario through the fault-tolerant supervised loop
+    (checkpoints land in ``ckpt_dir`` — ``serve_scenario`` restores them)."""
+    sc = get_scenario(name_or_sc) if isinstance(name_or_sc, str) else name_or_sc
+    cfg = TrainConfig(
+        steps=steps or sc.steps, lr=sc.lr,
+        warmup_steps=max((steps or sc.steps) // 20, 2),
+        checkpoint_every=max((steps or sc.steps) // 4, 10),
+        checkpoint_dir=ckpt_dir, seed=seed,
+    )
+    if sc.conditional:
+        from repro.train import train_conditional_flow
+
+        problem = sc.make_problem(seed=seed)
+        model = build_conditional_model(sc, mesh=mesh)
+        res = train_conditional_flow(model, problem, cfg, mesh=mesh,
+                                     log_every=log_every)
+        return ScenarioRun(sc, model, res.params, problem=problem, result=res)
+
+    from repro.data import SyntheticImages
+    from repro.train import train_flow
+
+    flow = build_flow(sc.flow)
+    data = SyntheticImages(size=sc.image_size, batch=sc.batch, seed=seed)
+    res = train_flow(flow, data, cfg, data.batch_at(0), mesh=mesh,
+                     log_every=log_every)
+    return ScenarioRun(sc, flow, res.params, result=res)
+
+
+def restore_scenario(name_or_sc, ckpt_dir: str, mesh=None) -> ScenarioRun:
+    """Rebuild a scenario's model and restore its latest checkpoint."""
+    from repro.optim import adamw_init, compression_init
+    from repro.train import checkpoint as ckpt
+
+    sc = get_scenario(name_or_sc) if isinstance(name_or_sc, str) else name_or_sc
+    rng = jax.random.PRNGKey(0)
+    if sc.conditional:
+        problem = sc.make_problem()
+        model = build_conditional_model(sc, mesh=mesh)
+        b0 = problem.batch_at(0)
+        params = model.init(rng, b0["theta"], b0["y"])
+    else:
+        from repro.data import SyntheticImages
+
+        problem = None
+        model = build_flow(sc.flow)
+        data = SyntheticImages(size=sc.image_size, batch=sc.batch)
+        params = model.init(rng, data.batch_at(0))
+    like = {"params": params, "opt": adamw_init(params),
+            "err": compression_init(params)}
+    state, step = ckpt.restore(like, ckpt_dir)
+    return ScenarioRun(sc, model, state["params"], problem=problem,
+                       result=None)
+
+
+def posterior_report(run: ScenarioRun, *, y_obs=None, key=None,
+                     n_samples: int | None = None, chunk: int | None = None,
+                     calibration: bool = True, sbc_sims: int | None = None,
+                     sbc_draws: int | None = None):
+    """Streaming posterior statistics (+ optional calibration report) for a
+    trained conditional scenario: the paper's train -> posterior ->
+    uncertainty-map -> calibration workflow in one call."""
+    from repro.uq.calibration import calibrate
+    from repro.uq.posterior import PosteriorEngine
+
+    sc = run.scenario
+    if not sc.conditional:
+        raise ValueError(f"scenario {sc.name!r} has no posterior (prior flow)")
+    key = jax.random.PRNGKey(0) if key is None else key
+    if y_obs is None:
+        # a held-out observation: far outside the training step range
+        y_obs = run.problem.batch_at(10_000)["y"][:1]
+    engine = PosteriorEngine(run.model, run.params, y=y_obs,
+                             theta_dim=run.problem.d_theta)
+    stats = engine.run(key, n_samples=n_samples or sc.n_posterior,
+                       chunk=chunk or sc.chunk)
+    report = None
+    if calibration:
+        sampler = lambda k, y, n: run.model.sample(
+            run.params, k, y, n=n, theta_dim=run.problem.d_theta
+        )
+        report = calibrate(
+            sampler, run.problem.op.simulate, key=jax.random.fold_in(key, 1),
+            n_sims=sbc_sims or sc.sbc_sims, n_draws=sbc_draws or sc.sbc_draws,
+        )
+    return stats, report

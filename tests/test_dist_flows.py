@@ -94,14 +94,17 @@ def test_sharded_glow_scanned_matches_single_device():
                                rtol=1e-5, atol=1e-5)
 
     # batch-sharded log_prob + sampling parity through the serving engine
-    from repro.core.distributions import std_normal_logpdf, std_normal_sample
+    from repro.core.distributions import (
+        derive_key, std_normal_logpdf, std_normal_sample)
     engine = FlowServeEngine(flow, params, mesh=mesh)
     lp = engine.log_prob(x)
     np.testing.assert_allclose(np.asarray(lp),
                                np.asarray(std_normal_logpdf(z0) + ld0),
                                rtol=1e-4, atol=1e-4)
     samples = engine.sample(jax.random.PRNGKey(2), z0)
-    ref = flow.inverse(params, std_normal_sample(jax.random.PRNGKey(2), z0))
+    # the engine derives its latent stream split-and-fold from the user key
+    zs = std_normal_sample(derive_key(jax.random.PRNGKey(2), 0), z0)
+    ref = flow.inverse(params, zs)
     for s, r in zip(jax.tree_util.tree_leaves(samples),
                     jax.tree_util.tree_leaves(ref)):
         np.testing.assert_allclose(np.asarray(s), np.asarray(r),

@@ -112,9 +112,14 @@ def test_conditional_sample_kernel_path_consistent():
     s_k = model_k.sample(params, rng, y, n=n, theta_dim=d)
     np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_plain), rtol=1e-4, atol=1e-4)
 
-    # round-trip: forward(sample(z)) == z, and the densities agree
+    # round-trip: forward(sample(z)) == z, and the densities agree (sampling
+    # derives its latent key split-and-fold from the user key)
+    from repro.core import derive_key
+
     cond = jnp.repeat(model_k._cond(params, y), n, axis=0)
-    z_drawn = jax.random.normal(rng, (cond.shape[0], d))
+    z_drawn = jax.random.normal(
+        derive_key(rng, ConditionalFlow._TAG_SAMPLE), (cond.shape[0], d)
+    )
     z_back, logdet = flow.forward(params["flow"], s_k, cond)
     np.testing.assert_allclose(np.asarray(z_back), np.asarray(z_drawn), rtol=5e-4, atol=5e-4)
     lp = model_k.log_prob(params, s_k, jnp.repeat(y, n, axis=0))
