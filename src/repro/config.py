@@ -281,6 +281,15 @@ class TrainConfig:
     grad_compression: str = "none"  # none | topk | int8
     compression_ratio: float = 0.01  # for topk
     remat_policy: str = "invertible"  # invertible | none | full
+    # gradient accumulation: microbatches per (per-shard) step; 1 = off
+    accum_steps: int = 1
+    # async host input pipeline: batches prefetched (and, on a mesh, placed)
+    # ahead of the running step; 0 = fully synchronous loop
+    prefetch: int = 2
+    # GPipe depth parallelism (train_pipeline): microbatches streamed
+    # through the "pipe" mesh axis per step; 0 = no pipeline mode
+    pipeline_microbatches: int = 0
+    pipeline_axis: str = "pipe"
 
 
 # ---------------------------------------------------------------------------

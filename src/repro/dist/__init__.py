@@ -12,15 +12,20 @@ serving engines and the dry-run:
   ``shard_map``-based NLL value-and-grad (the coupled reversible VJP with
   per-shard accumulators ``psum``-reduced over the data axis) and
   batch-sharded placement for ``sample`` / ``log_prob``.
+* :mod:`repro.dist.step` — the data-parallel *training step* the mesh-aware
+  loop runs on pure-DP meshes: per-shard gradients with the reduction
+  either overlapped into the backward (``psum_axis``) or error-feedback
+  compressed before the wire, gradient accumulation, donated state.
 
 Everything here is backend-agnostic: the multi-device tests forge 8 CPU
 host devices via ``--xla_force_host_platform_device_count`` and the same
 code drives real TPU meshes.
 """
 
-from repro.dist import flow, pipeline, sharding
+from repro.dist import flow, pipeline, sharding, step
 from repro.dist.flow import dp_value_and_grad_nll, shard_batch
 from repro.dist.pipeline import pipeline_forward, pipeline_stage_fn
+from repro.dist.step import dp_axis, dp_size, is_pure_dp, make_dp_train_step
 from repro.dist.sharding import (
     batch_pspecs,
     batch_sharding,
@@ -37,8 +42,12 @@ __all__ = [
     "batch_sharding",
     "cache_pspecs",
     "data_axis_names",
+    "dp_axis",
+    "dp_size",
     "dp_value_and_grad_nll",
     "flow",
+    "is_pure_dp",
+    "make_dp_train_step",
     "layer_slice_pspecs",
     "opt_pspecs",
     "params_pspecs",
@@ -47,5 +56,6 @@ __all__ = [
     "pipeline_stage_fn",
     "shard_batch",
     "sharding",
+    "step",
     "to_shardings",
 ]

@@ -10,9 +10,13 @@ pipeline depth just like the scan-compiled stacks.
 
 The forward is numerically identical to running all ``S * L_per`` blocks
 sequentially on one device (the contract ``tests/test_distributed.py``
-pins).  Backward support comes from the reversible engines upstream — a
-pipeline stage whose body is an invertible stack reconstructs its inputs
-locally, so only the inter-stage boundary activations ever cross devices.
+pins).  The tick loop is a ``lax.scan`` (not ``fori_loop``), so the whole
+schedule is reverse-mode differentiable — the train loop's opt-in pipeline
+mode (``repro.train.loop.train_pipeline``) backpropagates straight through
+it, with the backward ``ppermute`` flowing upstream as the transpose of the
+forward hand-off.  Reversible stage bodies additionally reconstruct their
+inputs locally, so only the inter-stage boundary activations (and their
+cotangents) ever cross devices.
 """
 
 from __future__ import annotations
@@ -68,7 +72,7 @@ def pipeline_forward(
         buf = jnp.zeros(xs.shape[1:], xs.dtype)  # microbatch arriving upstream
         outs = jnp.zeros_like(xs)
 
-        def tick(t, carry):
+        def tick(carry, t):
             buf, outs = carry
             # stage `idx` works on microbatch m = t - idx this tick
             m = t - idx
@@ -88,9 +92,10 @@ def pipeline_forward(
             # hand the activation to the next stage (device S-1 sends nowhere,
             # device 0 receives zeros — both ends idle into the bubble)
             buf = lax.ppermute(y, axis, downstream)
-            return buf, outs
+            return (buf, outs), None
 
-        _, outs = lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # scan (not fori_loop) keeps the schedule reverse-mode differentiable
+        (_, outs), _ = lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
         # only the last stage holds real outputs; psum replicates them
         keep = (idx == n_stages - 1).astype(outs.dtype)
         return lax.psum(outs * keep, axis)

@@ -52,10 +52,14 @@ def _data_size(mesh) -> int:
     return math.prod(_axis_size(mesh, a) for a in data_axis_names(mesh)) or 1
 
 
-def _data_entry(mesh):
-    """The PartitionSpec entry sharding one dim over all data axes."""
+def data_entry(mesh):
+    """The PartitionSpec entry sharding one dim over all data axes (a single
+    axis name, or the tuple of names on a multi-pod mesh)."""
     names = data_axis_names(mesh)
     return names if len(names) > 1 else names[0]
+
+
+_data_entry = data_entry
 
 
 def _shape(leaf) -> tuple[int, ...]:

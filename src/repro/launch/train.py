@@ -46,6 +46,12 @@ def main():
                     choices=[None, "invertible", "coupled", "remat", "autodiff"])
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "topk", "int8"])
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches per (per-shard)"
+                         " step (1 = off)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="input batches prefetched (and placed) ahead of the"
+                         " running step (0 = synchronous)")
     ap.add_argument("--ckpt", default="checkpoints/train")
     ap.add_argument("--step-timeout", type=float, default=0.0)
     ap.add_argument("--mesh", default="",
@@ -94,6 +100,7 @@ def main():
         steps=steps, lr=args.lr, warmup_steps=max(steps // 20, 2),
         checkpoint_every=max(steps // 4, 10), checkpoint_dir=args.ckpt,
         grad_compression=args.grad_compression, step_timeout_s=args.step_timeout,
+        accum_steps=args.accum, prefetch=args.prefetch,
     )
     res = train_lm(model, data, tcfg, grad_mode=args.grad_mode, mesh=mesh,
                    log_every=max(steps // 10, 1))

@@ -2,6 +2,7 @@ from repro.optim.adamw import adamw_init, adamw_update
 from repro.optim.schedule import cosine_warmup
 from repro.optim.compression import (
     compress_grads,
+    compressed_allreduce,
     compression_init,
     decompress_and_correct,
 )
@@ -11,6 +12,7 @@ __all__ = [
     "adamw_update",
     "cosine_warmup",
     "compress_grads",
+    "compressed_allreduce",
     "compression_init",
     "decompress_and_correct",
 ]

@@ -1,14 +1,27 @@
 """The training loop: jitted step, checkpoint/restart, preemption handling,
-straggler watchdog, gradient compression.
+straggler watchdog, gradient compression, async input, pipeline mode.
 
-Two front-ends over one supervised loop:
-  * ``train_lm(model, ...)``    — LM training (the production path)
-  * ``train_flow(flow, ...)``   — flow NLL training (the paper's native path)
+Front-ends over one supervised loop:
+  * ``train_lm(model, ...)``       — LM training (the production path)
+  * ``train_flow(flow, ...)``      — flow NLL training (the paper's native path)
+  * ``train_conditional_flow(...)``— amortized posterior training (repro.uq)
+  * ``train_pipeline(...)``        — opt-in GPipe depth parallelism
 
-Both take an optional ``mesh``: the step is then jitted with explicit
-in/out shardings from ``repro.dist`` (batch over the data axes,
-params/moments model-sharded) and GSPMD inserts the gradient all-reduce —
-the loop body is unchanged.
+All take an optional ``mesh``.  On a **pure data-parallel** mesh the step
+is the explicit ``shard_map`` program from :mod:`repro.dist.step`: every
+shard runs the single-device step on its batch slice, gradient reduction
+is either overlapped into the backward (the flow engines' ``psum_axis``
+custom-VJP hook) or error-feedback **compressed before the wire**
+(``cfg.grad_compression``), gradient accumulation (``cfg.accum_steps``)
+runs per shard, and the previous train state is donated.  On meshes with a
+model axis the step falls back to GSPMD jit with explicit in/out
+shardings, exactly as before.
+
+The host input pipeline is asynchronous by default (``cfg.prefetch``):
+step ``N+1``'s batch is produced — and on a mesh already placed with its
+data-parallel sharding — by a background thread while step ``N`` runs.
+Because the data sources are pure functions of the step index, prefetching
+preserves the determinism/restart contract below bit-for-bit.
 
 Fault-tolerance contract (tested): the loop can be killed at any step and
 restarted; it resumes from the latest checkpoint, and — because the data
@@ -21,6 +34,7 @@ state onto the new mesh.
 from __future__ import annotations
 
 import signal
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -29,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.config import TrainConfig
 from repro.core.distributions import std_normal_logpdf
+from repro.data.pipeline import Prefetcher
 from repro.optim import (
     adamw_init,
     adamw_update,
@@ -36,6 +51,7 @@ from repro.optim import (
     compression_init,
     cosine_warmup,
 )
+from repro.optim.accum import accumulate_grads
 from repro.train import checkpoint as ckpt
 from repro.train.fault import FailureInjector, StragglerWatchdog, run_with_restarts
 
@@ -50,19 +66,64 @@ class TrainResult:
     flagged_steps: tuple = ()
 
 
+def _dp_fast_path(mesh, cfg: TrainConfig) -> bool:
+    """True when the mesh runs the explicit shard_map DP step."""
+    if mesh is None:
+        return False
+    from repro.dist.step import is_pure_dp
+
+    if not is_pure_dp(mesh):
+        if cfg.grad_compression != "none":
+            raise ValueError(
+                "grad_compression requires a pure data-parallel mesh: on a "
+                "model-sharded mesh the GSPMD partitioner inserts the dense "
+                "gradient all-reduce itself, and compressing after the fact "
+                "would not put compressed bytes on the wire"
+            )
+        return False
+    return True
+
+
+def _err_shards(mesh, cfg: TrainConfig) -> int | None:
+    """Leading shard-axis extent for error-feedback state (None = local)."""
+    if cfg.grad_compression == "none":
+        return None
+    if mesh is not None and _dp_fast_path(mesh, cfg):
+        from repro.dist.step import dp_size
+
+        return dp_size(mesh)
+    return None
+
+
+def _init_err(params, mesh, cfg: TrainConfig):
+    if cfg.grad_compression == "none":
+        # no accumulators: keeps state/checkpoints free of dead zero trees
+        return jax.tree_util.tree_map(lambda _: None, params)
+    return compression_init(params, _err_shards(mesh, cfg))
+
+
 def _state_shardings(state, mesh):
     """NamedSharding tree for a ``{"params", "opt", "err"}`` train state:
     params model-sharded by the shared ``repro.dist`` rules, moments
-    mirroring them, error-feedback accumulators likewise (``None`` where
-    the param is an integer buffer)."""
-    from repro.dist.sharding import opt_pspecs, params_pspecs, to_shardings
+    mirroring them, error-feedback accumulators sharded over the data axes
+    along their per-shard leading axis (``None`` where absent)."""
+    from jax.sharding import PartitionSpec
+    from repro.dist.sharding import (
+        data_axis_names,
+        data_entry,
+        opt_pspecs,
+        params_pspecs,
+        to_shardings,
+    )
 
     p_specs = params_pspecs(state["params"], mesh)
     o_specs = opt_pspecs(state["opt"], p_specs, mesh)
+    has_data = bool(data_axis_names(mesh))
     err_specs = jax.tree_util.tree_map(
-        lambda e, sp: None if e is None else sp,
+        lambda e: None
+        if e is None
+        else (PartitionSpec(data_entry(mesh)) if has_data else PartitionSpec()),
         state["err"],
-        p_specs,
         is_leaf=lambda v: v is None,
     )
     return to_shardings(
@@ -71,23 +132,42 @@ def _state_shardings(state, mesh):
 
 
 def _make_step(loss_fn: Callable, cfg: TrainConfig, mesh=None, state=None,
-               batch=None):
+               batch=None, vjp_psum_axis=None):
     """Build the jitted (state, batch, step) -> (state, metrics) update.
 
-    With a ``mesh`` the step is jitted with explicit in/out shardings —
-    batch split over the data axes, params/moments model-sharded — so the
-    same loop runs single-device or SPMD (GSPMD inserts the gradient
-    all-reduce); ``state``/``batch`` prototypes are required then."""
+    Pure-DP meshes get the explicit shard_map step (compression on the
+    wire, overlapped/accumulated gradients, donated state —
+    :func:`repro.dist.step.make_dp_train_step`); model-sharded meshes keep
+    the GSPMD jit with explicit in/out shardings; no mesh jits the plain
+    single-device step.  ``vjp_psum_axis``: the loss's custom VJP already
+    reduces parameter cotangents over that mesh axis (flow engines built
+    with ``psum_axis``)."""
+    if mesh is not None and _dp_fast_path(mesh, cfg):
+        from repro.dist.step import dp_axis, make_dp_train_step
+
+        if cfg.grad_compression != "none" and vjp_psum_axis is not None:
+            raise ValueError(
+                "grad_compression with a psum_axis flow: the engine VJP "
+                "would all-reduce dense cotangents before compression — "
+                "build the flow without psum_axis to train compressed"
+            )
+        return make_dp_train_step(
+            loss_fn, cfg, mesh, state, batch,
+            grads_reduced_by_vjp=(
+                vjp_psum_axis is not None and vjp_psum_axis == dp_axis(mesh)
+            ),
+        )
+
+    n_micro = max(int(cfg.accum_steps), 1)
 
     def step_fn(state, batch, step):
-        def lf(p):
-            out = loss_fn(p, batch)
+        def lf(p, b):
+            out = loss_fn(p, b)
             return out if isinstance(out, tuple) else (out, {})
 
-        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True, allow_int=True)(
-            state["params"]
-        )
-        # error-feedback compression before the (cross-pod) gradient reduce
+        loss, aux, grads = accumulate_grads(lf, state["params"], batch, n_micro)
+        # local error-feedback compression (single-process: nothing crosses
+        # a wire here; the distributed twin lives in repro.dist.step)
         grads, new_err = compress_grads(
             grads, state["err"], cfg.grad_compression, cfg.compression_ratio
         )
@@ -111,6 +191,32 @@ def _make_step(loss_fn: Callable, cfg: TrainConfig, mesh=None, state=None,
     )
 
 
+def _restore_state(like, cfg: TrainConfig, shardings):
+    """Checkpoint restore that survives error-feedback shape changes: an
+    elastic restart onto a different data-parallel width re-zeros the
+    per-shard residuals (an optimization detail, not model state) instead
+    of failing."""
+    try:
+        return ckpt.restore(like, cfg.checkpoint_dir, shardings=shardings)
+    except ValueError as e:
+        if "['err']" not in str(e):
+            raise
+        sub = {"params": like["params"], "opt": like["opt"]}
+        sub_sh = (
+            {"params": shardings["params"], "opt": shardings["opt"]}
+            if shardings is not None
+            else None
+        )
+        state, step = ckpt.restore(sub, cfg.checkpoint_dir, shardings=sub_sh)
+        warnings.warn(
+            "error-feedback accumulator shape changed across restart "
+            "(elastic data-parallel resize); residuals re-zeroed",
+            stacklevel=2,
+        )
+        state["err"] = like["err"]
+        return state, step
+
+
 def _supervised_loop(
     loss_fn: Callable,
     init_params_fn: Callable[[], Any],
@@ -120,10 +226,12 @@ def _supervised_loop(
     mesh=None,
     injector: Optional[FailureInjector] = None,
     log_every: int = 0,
+    vjp_psum_axis=None,
 ) -> TrainResult:
-    # mesh-aware jit needs state/batch prototypes: built lazily on the first
-    # attempt (the jit cache carries it across restarts)
-    step_cache: dict = {"fn": None if mesh is not None else _make_step(loss_fn, cfg)}
+    # the jitted step is built lazily on the first batch of the first
+    # attempt (mesh-aware jit needs state/batch prototypes); the cache
+    # carries it across restarts
+    step_cache: dict = {"fn": None}
     watchdog = (
         StragglerWatchdog(cfg.step_timeout_s) if cfg.step_timeout_s > 0 else None
     )
@@ -141,61 +249,93 @@ def _supervised_loop(
     except ValueError:  # non-main thread (tests)
         pass
 
+    if mesh is not None:
+        from repro.dist.flow import shard_batch
+
+        def batch_fn(step: int):
+            # placement happens here too, so the prefetch thread produces
+            # *device-resident, correctly sharded* batches ahead of time
+            return shard_batch(data_fn(step), mesh)
+    else:
+        batch_fn = data_fn
+
     def attempt_run(attempt: int) -> TrainResult:
         start = ckpt.latest_step(cfg.checkpoint_dir)
         if start is not None:
-            like = {
-                "params": init_params_fn(),
-                "opt": None,
-                "err": None,
-            }
+            like = {"params": init_params_fn(), "opt": None, "err": None}
             like["opt"] = adamw_init(like["params"])
-            like["err"] = compression_init(like["params"])
+            like["err"] = _init_err(like["params"], mesh, cfg)
             # elastic restart: arrays land directly in the *current* mesh's
             # layout, whatever mesh the checkpoint was written under
             shardings = _state_shardings(like, mesh) if mesh is not None else None
-            state, start_step = ckpt.restore(
-                like, cfg.checkpoint_dir, shardings=shardings
-            )
+            state, start_step = _restore_state(like, cfg, shardings)
             start_step += 1
         else:
             params = init_params_fn()
             state = {
                 "params": params,
                 "opt": adamw_init(params),
-                "err": compression_init(params),
+                "err": _init_err(params, mesh, cfg),
             }
             start_step = 0
         if mesh is not None:
             state = jax.device_put(state, _state_shardings(state, mesh))
-            if step_cache["fn"] is None:
-                step_cache["fn"] = _make_step(
-                    loss_fn, cfg, mesh=mesh, state=state, batch=data_fn(start_step)
-                )
-        step_fn = step_cache["fn"]
 
+        prefetch = (
+            Prefetcher(batch_fn, start_step, lookahead=cfg.prefetch)
+            if cfg.prefetch > 0
+            else None
+        )
         losses = []
         step = start_step
-        for step in range(start_step, cfg.steps):
-            if injector is not None:
-                injector.maybe_fail(step)
-            if watchdog is not None:
-                watchdog.start_step(step)
-            batch = data_fn(step)
-            state, metrics = step_fn(state, batch, jnp.asarray(step, jnp.int32))
-            if watchdog is not None:
-                watchdog.end_step()
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            if log_every and step % log_every == 0:
-                print(f"step {step:6d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e}")
-            if (step + 1) % cfg.checkpoint_every == 0 or preempted["flag"]:
-                ckpt.save(state, cfg.checkpoint_dir, step, cfg.keep_checkpoints)
-                if preempted["flag"]:
-                    break
-        else:
-            step = cfg.steps - 1
-        ckpt.save(state, cfg.checkpoint_dir, step, cfg.keep_checkpoints)
+        saved_at = None
+        try:
+            for step in range(start_step, cfg.steps):
+                if watchdog is not None:
+                    watchdog.start_step(step)
+                try:
+                    if injector is not None:
+                        injector.maybe_fail(step)
+                    if prefetch is not None:
+                        got_step, batch = prefetch.get()
+                        if got_step != step:  # pragma: no cover - invariant
+                            raise RuntimeError(
+                                f"prefetch out of order: wanted {step}, "
+                                f"got {got_step}"
+                            )
+                    else:
+                        batch = batch_fn(step)
+                    if step_cache["fn"] is None:
+                        step_cache["fn"] = _make_step(
+                            loss_fn, cfg, mesh=mesh, state=state, batch=batch,
+                            vjp_psum_axis=vjp_psum_axis,
+                        )
+                    state, metrics = step_cache["fn"](
+                        state, batch, jnp.asarray(step, jnp.int32)
+                    )
+                finally:
+                    # the deadline timer must die with the step — a step
+                    # that *raises* would otherwise leave it running and
+                    # flag the restarted attempt's re-run as a straggler
+                    if watchdog is not None:
+                        watchdog.end_step()
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if log_every and step % log_every == 0:
+                    print(f"step {step:6d}  loss {loss:.4f}  "
+                          f"lr {float(metrics['lr']):.2e}")
+                if (step + 1) % cfg.checkpoint_every == 0 or preempted["flag"]:
+                    ckpt.save(state, cfg.checkpoint_dir, step, cfg.keep_checkpoints)
+                    saved_at = step
+                    if preempted["flag"]:
+                        break
+            else:
+                step = cfg.steps - 1
+        finally:
+            if prefetch is not None:
+                prefetch.close()
+        if saved_at != step:  # skip the redundant back-to-back final save
+            ckpt.save(state, cfg.checkpoint_dir, step, cfg.keep_checkpoints)
         return TrainResult(
             params=state["params"],
             opt_state=state["opt"],
@@ -264,7 +404,11 @@ def train_conditional_flow(model, data, cfg: TrainConfig, rng=None, mesh=None,
 def train_flow(flow, data, cfg: TrainConfig, example, rng=None, cond_fn=None,
                mesh=None, injector=None, log_every: int = 0) -> TrainResult:
     """``data.batch_at(step)`` returns x (or a dict with 'theta'/'y' for
-    conditional flows via ``cond_fn(batch) -> (x, cond)``)."""
+    conditional flows via ``cond_fn(batch) -> (x, cond)``).
+
+    A flow built with ``psum_axis`` matching the mesh's data axis reduces
+    its parameter cotangents *inside* the reversible backward — the DP step
+    then skips its own reduction (the overlapped-collective path)."""
     rng = jax.random.PRNGKey(cfg.seed) if rng is None else rng
 
     def loss_fn(params, batch):
@@ -283,6 +427,58 @@ def train_flow(flow, data, cfg: TrainConfig, example, rng=None, cond_fn=None,
         if isinstance(example, tuple):
             return flow.init(rng, example[0], cond=example[1])
         return flow.init(rng, example)
+
+    return _supervised_loop(
+        loss_fn,
+        init_fn,
+        lambda step: data.batch_at(step),
+        cfg,
+        mesh=mesh,
+        injector=injector,
+        log_every=log_every,
+        vjp_psum_axis=getattr(flow, "psum_axis", None),
+    )
+
+
+def train_pipeline(block_apply, init_fn, data, cfg: TrainConfig, *, mesh,
+                   loss_head, n_layers_per_stage: int, injector=None,
+                   log_every: int = 0) -> TrainResult:
+    """Opt-in GPipe depth parallelism (``repro.dist.pipeline``) under the
+    full supervised-loop contract.
+
+    ``init_fn()`` must return params with a ``"stages"`` entry whose leaves
+    are stage-stacked ``(S, n_layers_per_stage, ...)`` for the mesh's
+    ``cfg.pipeline_axis`` (extent ``S``); ``block_apply(p, h) -> h`` is a
+    single block; ``loss_head(params, h, batch) -> scalar`` consumes the
+    pipeline output.  Each step reshapes the batch into
+    ``cfg.pipeline_microbatches`` microbatches, streams them through the
+    stage devices with per-tick ``ppermute`` hand-offs, and differentiates
+    straight through the schedule (the tick loop is a ``lax.scan``).
+    """
+    from repro.dist.pipeline import pipeline_forward, pipeline_stage_fn
+
+    n_micro = cfg.pipeline_microbatches
+    if n_micro <= 0:
+        raise ValueError("train_pipeline needs cfg.pipeline_microbatches > 0")
+    if mesh is None or cfg.pipeline_axis not in mesh.axis_names:
+        raise ValueError(
+            f"train_pipeline needs a mesh with a {cfg.pipeline_axis!r} axis"
+        )
+    stage = pipeline_stage_fn(block_apply, n_layers_per_stage)
+
+    def loss_fn(params, batch):
+        x = batch["x"]
+        if x.shape[0] % n_micro:
+            raise ValueError(
+                f"pipeline_microbatches={n_micro} does not divide the "
+                f"batch {x.shape[0]}"
+            )
+        xm = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+        h = pipeline_forward(
+            stage, params["stages"], xm, mesh, axis=cfg.pipeline_axis
+        )
+        h = h.reshape((x.shape[0],) + h.shape[2:])
+        return loss_head(params, h, batch)
 
     return _supervised_loop(
         loss_fn,

@@ -235,7 +235,7 @@ def train_scenario(name_or_sc, *, steps: int | None = None, mesh=None,
 
 def restore_scenario(name_or_sc, ckpt_dir: str, mesh=None) -> ScenarioRun:
     """Rebuild a scenario's model and restore its latest checkpoint."""
-    from repro.optim import adamw_init, compression_init
+    from repro.optim import adamw_init
     from repro.train import checkpoint as ckpt
 
     sc = get_scenario(name_or_sc) if isinstance(name_or_sc, str) else name_or_sc
@@ -252,8 +252,10 @@ def restore_scenario(name_or_sc, ckpt_dir: str, mesh=None) -> ScenarioRun:
         model = build_flow(sc.flow)
         data = SyntheticImages(size=sc.image_size, batch=sc.batch)
         params = model.init(rng, data.batch_at(0))
+    # scenarios train without gradient compression, so the loop stores an
+    # all-None error-feedback tree; the restore template must match it
     like = {"params": params, "opt": adamw_init(params),
-            "err": compression_init(params)}
+            "err": jax.tree_util.tree_map(lambda _: None, params)}
     state, step = ckpt.restore(like, ckpt_dir)
     return ScenarioRun(sc, model, state["params"], problem=problem,
                        result=None)

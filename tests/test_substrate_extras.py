@@ -6,6 +6,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import get_arch
 from repro.data import SyntheticTokens
@@ -72,3 +73,53 @@ def test_grad_accumulation_matches_full_batch():
         lambda a, b: float(jnp.max(jnp.abs(a - b.astype(a.dtype)))), g_acc, g_full
     )
     assert max(jax.tree_util.tree_leaves(diffs)) < 5e-3
+
+
+def test_topk_compression_sends_exactly_k_under_ties():
+    """A threshold rule (|g| >= thresh) sends *every* tied entry — a
+    constant gradient would ship the whole tensor at ratio 0.25.  The
+    selection must be exactly-k regardless of ties."""
+    from repro.optim.compression import compress_grads, compression_init
+
+    g = {"w": jnp.ones((10, 10))}  # all 100 magnitudes tie
+    err = compression_init(g)
+    sent, new_err = compress_grads(g, err, "topk", ratio=0.25)
+    n_sent = int(jnp.sum(sent["w"] != 0.0))
+    assert n_sent == 25, f"tie-broken top-k sent {n_sent} entries, not k=25"
+    # error feedback: what was not sent is carried, exactly
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + new_err["w"]), np.asarray(g["w"]), rtol=1e-6
+    )
+
+
+def test_prefetcher_close_is_prompt_and_joins_worker():
+    """Shutdown race regression: a worker blocked in ``queue.put`` must
+    observe the stop flag — close() returns with the thread joined even
+    when the queue is full and the producer mid-put."""
+    data = SyntheticTokens(100, seq_len=8, batch=4, seed=3)
+    pf = Prefetcher(data.batch_at, start_step=0, lookahead=2)
+    pf.get()  # ensure the worker is alive and producing
+    time.sleep(0.1)  # let the worker fill the queue and block in put
+    t0 = time.perf_counter()
+    pf.close()
+    assert time.perf_counter() - t0 < 2.0, "close() stalled on a blocked put"
+    assert not pf._thread.is_alive(), "worker thread not joined"
+    with pytest.raises(RuntimeError):
+        pf.get()
+    pf.close()  # idempotent
+
+
+def test_prefetcher_surfaces_worker_errors():
+    def bad_batch(step):
+        if step >= 2:
+            raise ValueError("source exhausted")
+        return step
+
+    pf = Prefetcher(bad_batch, start_step=0, lookahead=1)
+    try:
+        assert pf.get() == (0, 0)
+        assert pf.get() == (1, 1)
+        with pytest.raises(ValueError, match="source exhausted"):
+            pf.get()
+    finally:
+        pf.close()

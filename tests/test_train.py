@@ -142,3 +142,86 @@ def test_serve_greedy_matches_train_forward():
     np.testing.assert_allclose(
         np.asarray(logits_pf), np.asarray(logits_dec), rtol=2e-4, atol=2e-4
     )
+
+
+def test_prefetched_loop_matches_synchronous_across_restart(tmp_path):
+    """The async input pipeline must be invisible to training semantics:
+    a prefetched run that is killed mid-training and restarted reproduces
+    the exact final state of a fully synchronous uninterrupted run."""
+    model, data, tcfg = _tiny_setup(tmp_path / "sync", steps=10, ckpt_every=2,
+                                    prefetch=0)
+    sync = train_lm(model, data, tcfg)
+
+    model2, data2, tcfg2 = _tiny_setup(tmp_path / "pf", steps=10, ckpt_every=2,
+                                       prefetch=3)
+    inj = FailureInjector(fail_at=(5,))
+    pf = train_lm(model2, data2, tcfg2, injector=inj)
+    assert pf.restarts == 1
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), sync.params, pf.params
+    )
+    assert max(jax.tree_util.tree_leaves(diffs)) < 1e-5
+
+
+def test_watchdog_not_tripped_by_failing_steps(tmp_path):
+    """A step that *raises* must still cancel its straggler deadline (the
+    timer is armed before the failure point); a stale timer would fire
+    during the restart's restore/recompile and flag phantom stragglers."""
+    model, data, tcfg = _tiny_setup(tmp_path, steps=8, ckpt_every=2,
+                                    step_timeout_s=30.0)
+    inj = FailureInjector(fail_at=(3, 4))
+    res = train_lm(model, data, tcfg, injector=inj)
+    assert res.restarts == 2
+    assert res.flagged_steps == (), f"phantom stragglers: {res.flagged_steps}"
+
+
+def test_watchdog_timer_dies_with_raising_step():
+    """Module-level twin of the loop contract: armed deadline, step raises,
+    end_step in the unwind — the timer must not fire afterwards."""
+    import time
+
+    from repro.train.fault import StragglerWatchdog
+
+    wd = StragglerWatchdog(0.15)
+    try:
+        wd.start_step(0)
+        try:
+            raise RuntimeError("boom")
+        finally:
+            wd.end_step()
+    except RuntimeError:
+        pass
+    time.sleep(0.4)
+    assert wd.flagged_steps == []
+
+
+def test_no_duplicate_final_checkpoint(tmp_path, monkeypatch):
+    """When the final step lands on a ``checkpoint_every`` boundary the loop
+    used to save the same step twice back-to-back; the trailing save must be
+    skipped, and the checkpoint dir must hold exactly the expected steps."""
+    from repro.train import checkpoint as ckpt_mod
+
+    calls = []
+    real_save = ckpt_mod.save
+
+    def counting_save(state, ckpt_dir, step, keep=3):
+        calls.append(step)
+        return real_save(state, ckpt_dir, step, keep)
+
+    monkeypatch.setattr(ckpt_mod, "save", counting_save)
+
+    # steps=6, every 3: in-loop saves at steps 2 and 5; 5 is also final
+    model, data, tcfg = _tiny_setup(tmp_path / "aligned", steps=6, ckpt_every=3)
+    res = train_lm(model, data, tcfg)
+    assert res.final_step == 5
+    assert calls == [2, 5], f"duplicate/missing saves: {calls}"
+    dirs = sorted(
+        d for d in os.listdir(tcfg.checkpoint_dir) if d.startswith("step_")
+    )
+    assert dirs == ["step_00000002", "step_00000005"]
+
+    # steps=7: final step 6 is off-boundary -> one trailing save, no dupes
+    calls.clear()
+    model, data, tcfg = _tiny_setup(tmp_path / "off", steps=7, ckpt_every=3)
+    train_lm(model, data, tcfg)
+    assert calls == [2, 5, 6], f"unexpected saves: {calls}"
